@@ -1,0 +1,114 @@
+"""Shared federated-training benchmark loop.
+
+Each paper table/figure benchmark builds a (model, FederatedData) pair and
+calls :func:`run_methods` with the method grid from the paper:
+
+  FedAvg | FedProx | FedShare | UGA | FedMeta | FedMeta w/ UGA
+
+Datasets are synthetic stand-ins with the same cardinality / non-IID
+structure as the paper's (offline container — see DESIGN.md §9); the
+benchmark output is therefore about the paper's *relative* claims:
+method ordering, rounds-to-milestone ratios, and final-accuracy gaps.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import init_server_state, make_federated_round
+from repro.data.pipeline import FederatedData
+
+# method name -> FedConfig kwargs (the paper's comparison grid)
+METHODS = {
+    "fedavg": dict(algorithm="fedavg", meta=False, share=False),
+    "fedprox": dict(algorithm="fedprox", meta=False, share=False),
+    "fedshare": dict(algorithm="fedavg", meta=False, share=True),
+    "uga": dict(algorithm="uga", meta=False, share=False),
+    "fedmeta": dict(algorithm="fedavg", meta=True, share=False),
+    "fedmeta_uga": dict(algorithm="uga", meta=True, share=False),
+}
+
+
+def evaluate(model, params, data: FederatedData, idx: np.ndarray,
+             batch: int = 256) -> Dict[str, float]:
+    accs, losses, ns = [], [], []
+    for b in data.eval_batches(idx, batch):
+        b = jax.tree.map(jnp.asarray, b)
+        l, m = model.loss(params, b)
+        n = len(jax.tree.leaves(b)[0])
+        losses.append(float(l) * n)
+        accs.append(float(m.get("acc", jnp.nan)) * n)
+        ns.append(n)
+    n = sum(ns)
+    return {"loss": sum(losses) / n, "acc": sum(accs) / n}
+
+
+def train_method(model, data: FederatedData, method: str, *, rounds: int,
+                 cohort: int, batch: int, local_steps: int, lr: float,
+                 eval_idx: np.ndarray, eval_every: int = 5, seed: int = 0,
+                 lr_decay: float = 0.996, meta_batch: int = 32,
+                 prox_mu: float = 2e-4, uga_server_lr: Optional[float] = None,
+                 clip_norm: float = 2.0) -> List[Dict[str, float]]:
+    """uga_server_lr: eta_g for the UGA variants — defaults to
+    local_steps*lr*2 so one unbiased server step has a per-round
+    displacement comparable to FedAvg's local_steps biased ones (the paper
+    fixes eta_g = eta and runs 500+ rounds; benchmark budgets are smaller).
+    clip_norm tames the HVP amplification the paper notes in §4.5.1."""
+    kw = METHODS[method]
+    if uga_server_lr is None:
+        uga_server_lr = 2 * local_steps * lr
+    fed = FedConfig(algorithm=kw["algorithm"], meta=kw["meta"],
+                    share=kw["share"], cohort=cohort,
+                    local_steps=local_steps, client_lr=lr,
+                    server_lr=uga_server_lr,
+                    meta_lr=lr, lr_decay=lr_decay, prox_mu=prox_mu,
+                    clip_norm=clip_norm)
+    rf = jax.jit(make_federated_round(model, fed))
+    key = jax.random.PRNGKey(seed)
+    state = init_server_state(model, fed, key)
+    history = []
+    for r in range(rounds):
+        s = data.sample_round(r, cohort=cohort, batch=batch,
+                              share=kw["share"])
+        mb = data.sample_meta(r, meta_batch) if data.meta_indices is not None \
+            else jax.tree.map(lambda x: x[:meta_batch],
+                              s["cohort_batch"])
+        state, m = rf(state, jax.tree.map(jnp.asarray, s["cohort_batch"]),
+                      jax.tree.map(jnp.asarray, mb),
+                      jnp.asarray(s["client_weights"]),
+                      jax.random.fold_in(key, r))
+        if r % eval_every == 0 or r == rounds - 1:
+            ev = evaluate(model, state["params"], data, eval_idx)
+            history.append({"round": r, **ev,
+                            "client_loss": float(m["client_loss"])})
+    return history
+
+
+def rounds_to_accuracy(history: Sequence[Dict], target: float) -> Optional[int]:
+    for h in history:
+        if h["acc"] >= target:
+            return h["round"]
+    return None
+
+
+def run_methods(model, data, *, methods: Sequence[str], rounds: int,
+                cohort: int, batch: int, local_steps: int, lr: float,
+                eval_idx: np.ndarray, seed: int = 0, **kw
+                ) -> Dict[str, List[Dict]]:
+    out = {}
+    for m in methods:
+        t0 = time.time()
+        out[m] = train_method(model, data, m, rounds=rounds, cohort=cohort,
+                              batch=batch, local_steps=local_steps, lr=lr,
+                              eval_idx=eval_idx, seed=seed, **kw)
+        out[m + "__wall_s"] = time.time() - t0
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

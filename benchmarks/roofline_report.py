@@ -1,0 +1,66 @@
+"""§Roofline report: read the dry-run artifacts and emit the per
+(arch x shape x mesh) three-term roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "bottleneck", "flops_ratio")
+
+
+def load(art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "bottleneck | MODEL/HLO | temp GiB |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        ratio = rl.get("flops_ratio")
+        rs = f"{ratio:.2f}" if ratio is not None else "-"
+        temp = r.get("memory", {}).get("temp_size_in_bytes")
+        ts = f"{temp/2**30:.1f}" if temp else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"**{rl['bottleneck']}** | {rs} | {ts} |")
+    return "\n".join(lines)
+
+
+def csv(recs: List[Dict]) -> str:
+    lines = [",".join(COLS)]
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        rl = r["roofline"]
+        ratio = rl.get("flops_ratio")
+        lines.append(",".join([
+            r["arch"], r["shape"], r["mesh"], f"{rl['compute_s']:.4e}",
+            f"{rl['memory_s']:.4e}", f"{rl['collective_s']:.4e}",
+            rl["bottleneck"],
+            f"{ratio:.3f}" if ratio is not None else ""]))
+    return "\n".join(lines)
+
+
+def run(fast: bool = True):
+    recs = load()
+    return {"configs": len(recs),
+            "bottlenecks": {b: sum(1 for r in recs
+                                   if r["roofline"]["bottleneck"] == b)
+                            for b in ("compute", "memory", "collective")}}
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(table(recs))
+    print()
+    print(csv(recs))

@@ -1,0 +1,59 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call = wall time of
+the benchmark; derived = the paper-claim verdict for that table)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _fmt(d, digits=3):
+    if isinstance(d, dict):
+        return "{" + " ".join(f"{k}:{_fmt(v)}" for k, v in d.items()) + "}"
+    if isinstance(d, float):
+        return f"{d:.{digits}f}"
+    return str(d)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (hours); default is fast mode")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="artifacts/bench")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    from benchmarks import (fig4_shakespeare, fig5_meta_overlap,
+                            roofline_report, table1_cifar, table2_femnist,
+                            table3_ablation)
+    benches = {
+        "table1_split_cifar_iid": table1_cifar.run,
+        "table2_femnist_noniid": table2_femnist.run,
+        "table3_ablation": table3_ablation.run,
+        "fig4_shakespeare_gru": fig4_shakespeare.run,
+        "fig5_meta_overlap": fig5_meta_overlap.run,
+        "roofline_dryrun": roofline_report.run,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            result = fn(fast=fast)
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},{_fmt(result)}", flush=True)
+            with open(os.path.join(args.out, name + ".json"), "w") as f:
+                json.dump(result, f, indent=1, default=str)
+        except Exception as e:  # noqa: BLE001
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},ERROR:{e!r}", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 1 — CNN on split CIFAR-10 (IID): convergence accuracy of
+FedAvg / FedProx / FedShare / FedMeta w/ UGA with E=2,B=64 | E=2,B=128 |
+E=5,B=128 (reduced synthetic stand-in; orderings are the claim)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_methods
+from repro.configs import paper_models as pm
+from repro.data.partition import partition_iid
+from repro.data.pipeline import FederatedData
+from repro.data.synthetic import synthetic_images
+from repro.models.model import build_paper_cnn
+
+
+def _data(rng, n=1600, clients=10):
+    ds = synthetic_images(rng, n=n, image_size=16, channels=3,
+                          num_classes=10, num_writers=clients,
+                          style_strength=0.15)
+    meta = rng.choice(n, max(n // 100, 16), replace=False)
+    return FederatedData(
+        arrays={"x": ds.x, "y": ds.y},
+        client_indices=partition_iid(rng, n, clients),
+        meta_indices=meta, shared_indices=meta.copy(), seed=0), ds
+
+
+def run(fast: bool = True):
+    import dataclasses
+    rng = np.random.default_rng(0)
+    data, ds = _data(rng, n=800 if fast else 4000)
+    cfg = dataclasses.replace(pm.CIFAR_CNN_SMOKE, image_size=16)
+    model = build_paper_cnn(cfg)
+    eval_idx = rng.choice(len(ds.x), 256, replace=False)
+    settings = [("E2_B64", 2, 32)] if fast else \
+        [("E2_B64", 2, 64), ("E2_B128", 2, 128), ("E5_B128", 5, 128)]
+    results = {}
+    for tag, E, B in settings:
+        res = run_methods(
+            model, data,
+            methods=["fedavg", "fedprox", "fedshare", "fedmeta_uga"],
+            rounds=100 if fast else 400, cohort=2, batch=max(B // 8, E * 2),
+            local_steps=E, lr=0.002, uga_server_lr=0.01, eval_idx=eval_idx)
+        results[tag] = {m: res[m][-1]["acc"] for m in
+                        ("fedavg", "fedprox", "fedshare", "fedmeta_uga")}
+    return results

@@ -1,0 +1,61 @@
+"""Controllable federated models (§3.2.2 / Fig. 5 demo).
+
+Two client populations write in different "styles" (synthetic non-IID
+images).  The training cohort only ever contains population A; the server's
+meta set D_meta is drawn from population B — the deployment target.  With
+FedMeta the global model is steered toward B *without any B client ever
+training*; vanilla FedAvg can only fit A.
+
+    PYTHONPATH=src python examples/controllable_meta.py
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# benchmarks/ lives at the repo root (next to examples/), not under src/
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import evaluate, train_method  # noqa: E402
+from repro.configs import paper_models as pm
+from repro.data.partition import partition_by_writer
+from repro.data.pipeline import FederatedData
+from repro.data.synthetic import synthetic_images
+from repro.models.model import build_paper_cnn
+
+
+def main():
+    rng = np.random.default_rng(0)
+    writers = 16
+    ds = synthetic_images(rng, n=1600, image_size=14, channels=1,
+                          num_classes=10, num_writers=2 * writers,
+                          style_strength=0.9)
+    pop_a = list(range(writers))                 # training clients
+    pop_b = list(range(writers, 2 * writers))    # deployment target
+    parts = [p if p.size else np.array([0])
+             for p in partition_by_writer(ds.writer, pop_a)]
+    b_idx = np.where(np.isin(ds.writer, pop_b))[0]
+    meta = rng.choice(b_idx, 32, replace=False)              # D_meta ~ B !
+    eval_b = np.setdiff1d(b_idx, meta)[:256]
+
+    data = FederatedData(arrays={"x": ds.x, "y": ds.y},
+                         client_indices=parts, meta_indices=meta,
+                         shared_indices=meta.copy(), seed=0)
+    cfg = dataclasses.replace(pm.FEMNIST_CNN_SMOKE, image_size=14,
+                              num_classes=10)
+    model = build_paper_cnn(cfg)
+
+    for method in ("fedavg", "fedmeta"):
+        hist = train_method(model, data, method, rounds=25, cohort=4,
+                            batch=16, local_steps=2, lr=0.05,
+                            eval_idx=eval_b, eval_every=5)
+        print(f"{method:8s} accuracy on TARGET population B: "
+              f"{hist[-1]['acc']:.3f}")
+    print("\nFedMeta steers the federated model toward D_meta's population "
+          "— the paper's 'controllable federated models' in action.")
+
+
+if __name__ == "__main__":
+    main()

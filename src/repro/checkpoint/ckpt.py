@@ -1,0 +1,61 @@
+"""Msgpack pytree checkpointing (offline container: no orbax).
+
+Arrays are flattened to a path->(dtype, shape, bytes) table; any pytree of
+jnp/np arrays round-trips.  Sharded arrays are gathered to host before
+serialization (single-process container) — on a real pod this module would
+be replaced by per-shard writes keyed by ``jax.process_index()``; the layout
+(one blob per leaf path) is chosen so that switch is mechanical.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: PyTree, *, extra: Dict[str, Any] | None = None):
+    flat = _flatten(tree)
+    payload = {
+        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                       "data": v.tobytes()} for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = payload["leaves"]
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in flat_like:
+        key = _SEP.join(str(getattr(x, "key", getattr(x, "idx", x)))
+                        for x in p)
+        rec = leaves[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), (key, arr.shape)
+        out.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["extra"]

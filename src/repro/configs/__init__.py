@@ -1,0 +1,63 @@
+"""Config registry: ``get_arch(name)`` / ``get_smoke(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+from repro.configs.base import (ArchConfig, FedConfig, MLAConfig, MoEConfig,
+                                SHAPES, SSMConfig, ShapeConfig, EncoderConfig)
+
+from repro.configs import (phi3_mini_3_8b, whisper_large_v3, minicpm_2b,
+                           llama32_vision_90b, jamba_1_5_large_398b,
+                           deepseek_v2_lite_16b, llama4_scout_17b_a16e,
+                           smollm_360m, mamba2_780m, phi3_medium_14b)
+
+_MODULES = {
+    "phi3-mini-3.8b": phi3_mini_3_8b,
+    "whisper-large-v3": whisper_large_v3,
+    "minicpm-2b": minicpm_2b,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "smollm-360m": smollm_360m,
+    "mamba2-780m": mamba2_780m,
+    "phi3-medium-14b": phi3_medium_14b,
+}
+
+ARCHS = tuple(_MODULES.keys())
+
+# (arch, shape) pairs excluded from the matrix, with the documented reason
+# (DESIGN.md §5).  Everything else in ARCHS x SHAPES must lower + compile.
+SKIPS = {
+    ("whisper-large-v3", "long_500k"):
+        "encoder-decoder audio model: 500k-token transcript decode is not "
+        "meaningful and the decoder is full-attention by construction",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_smoke(name[: -len("-smoke")])
+    return _MODULES[name].CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _MODULES[name].SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def matrix():
+    """All (arch, shape) pairs that must pass the dry-run."""
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            if (a, s) in SKIPS:
+                continue
+            out.append((a, s))
+    return out
+
+
+__all__ = ["ArchConfig", "FedConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "EncoderConfig", "ShapeConfig", "SHAPES", "ARCHS", "SKIPS",
+           "get_arch", "get_smoke", "get_shape", "matrix"]

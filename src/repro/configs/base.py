@@ -1,0 +1,234 @@
+"""Architecture / shape / federated configuration dataclasses.
+
+Every assigned architecture is described by an :class:`ArchConfig` (exact
+numbers from the assignment, source cited in each ``configs/<id>.py``) plus a
+``smoke()`` reduced variant (2 layers, d_model<=512, <=4 experts) used by the
+CPU smoke tests.  The four assigned input shapes live in ``SHAPES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+ATTN = "attn"            # GQA self-attention
+MAMBA = "mamba"          # Mamba2 SSD block
+CROSS = "cross"          # cross-attention (VLM image layers / enc-dec)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared: int = 0                 # always-on shared experts (deepseek)
+    d_expert: Optional[int] = None      # per-expert FFN width (None -> d_ff)
+    every: int = 1                      # MoE MLP every `every`-th layer
+    aux_loss_coef: float = 0.01         # router load-balance aux loss
+    capacity_factor: float = 1.25       # expert capacity = K*gs/E * this
+    group_size: int = 4096              # tokens per dispatch group
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: Optional[int] = None   # None -> dense q projection (v2-lite)
+    rope_head_dim: int = 64             # decoupled RoPE key dimension
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD block hyper-parameters."""
+    d_state: int = 128
+    d_head: int = 64                    # P in SSD; heads = d_inner // d_head
+    expand: int = 2                     # d_inner = expand * d_model
+    chunk: int = 256                    # SSD chunk length
+    d_conv: int = 4                     # depthwise conv width
+    n_groups: int = 1                   # B/C projection groups (per-group, not per-head)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Stub-frontend encoder (audio/vision).  The conv/mel (whisper) or ViT
+    (VLM) frontend is NOT implemented (per assignment carve-out); inputs are
+    precomputed frame/patch embeddings of shape (batch, enc_len, enc_dim)."""
+    enc_layers: int
+    enc_len: int                        # number of frames / image tokens
+    enc_dim: int                        # embedding dim delivered by the stub
+    enc_heads: int = 16
+    enc_ff: int = 0                     # 0 -> 4*enc_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                         # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                      # query heads (0 for attn-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # hybrid interleave: within each group of `attn_period` layers, one is
+    # attention and the rest are `MAMBA` (jamba: 1:7 -> attn_period=8).
+    attn_period: int = 1                # 1 => every layer is attention
+    cross_every: int = 0                # >0: every k-th layer is cross-attn (vlm)
+    sliding_window: int = 0             # >0: sliding-window attention variant
+    dtype: str = "bfloat16"
+    source: str = ""                    # citation for the exact numbers
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Sequence of layer kinds, length == num_layers."""
+        kinds = []
+        for i in range(self.num_layers):
+            if self.cross_every and (i % self.cross_every == self.cross_every - 1):
+                kinds.append(CROSS)
+            elif self.attn_period > 1:
+                # jamba-style: attention once per period (in the middle),
+                # mamba elsewhere.
+                kinds.append(ATTN if i % self.attn_period == self.attn_period // 2
+                             else MAMBA)
+            elif self.family == "ssm":
+                kinds.append(MAMBA)
+            else:
+                kinds.append(ATTN)
+        return tuple(kinds)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + per-layer blocks)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = v * d                                    # token embedding
+        if not self.tie_embeddings:
+            total += v * d                               # lm head
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            total += 2 * d                               # 2 RMSNorm scales
+            if kind == MAMBA:
+                s = self.ssm or SSMConfig()
+                d_in = s.expand * d
+                heads = d_in // s.d_head
+                # in_proj -> [z, x, B, C, dt]; B/C are per-group
+                total += d * (2 * d_in + 2 * s.n_groups * s.d_state + heads)
+                total += (d_in + 2 * s.n_groups * s.d_state) * s.d_conv  # conv over x,B,C
+                total += 2 * heads                       # A, D per head
+                total += d_in * d                        # out_proj
+            elif kind in (ATTN, CROSS):
+                if self.mla is not None:
+                    m = self.mla
+                    q_dim = self.num_heads * (hd + m.rope_head_dim)
+                    total += d * (m.kv_lora_rank + m.rope_head_dim)       # kv down
+                    total += m.kv_lora_rank * self.num_heads * 2 * hd     # kv up
+                    total += d * q_dim                                    # q proj
+                    total += self.num_heads * hd * d                      # o proj
+                else:
+                    total += d * self.num_heads * hd                      # q
+                    total += 2 * d * self.num_kv_heads * hd               # k,v
+                    total += self.num_heads * hd * d                      # o
+            # MLP / MoE (mamba blocks in jamba also carry an MLP per layer)
+            total += self._mlp_params(i)
+        if self.encoder is not None:
+            e = self.encoder
+            eff = e.enc_ff or 4 * e.enc_dim
+            per = 4 * e.enc_dim * e.enc_dim + 3 * e.enc_dim * eff + 2 * e.enc_dim
+            total += e.enc_layers * per
+        return total
+
+    def _mlp_params(self, layer_idx: int) -> int:
+        d = self.d_model
+        if self.moe is not None and (layer_idx % self.moe.every == self.moe.every - 1):
+            m = self.moe
+            de = m.d_expert or self.d_ff
+            routed = m.num_experts * 3 * d * de          # swiglu experts
+            shared = m.num_shared * 3 * d * de
+            router = d * m.num_experts
+            return routed + shared + router
+        if self.d_ff == 0:
+            return 0                                     # attn-free pure SSM
+        return 3 * d * self.d_ff                         # swiglu dense
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        de = m.d_expert or self.d_ff
+        n_moe_layers = sum(1 for i in range(self.num_layers)
+                           if i % m.every == m.every - 1)
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * 3 * self.d_model * de
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",  524_288,    1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Federated configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Paper notation: B local batch, E local epochs, C client fraction.
+
+    algorithm:
+      'fedavg'   — FedAvg local SGD, delta aggregation (biased)   [paper baseline]
+      'uga'      — keep-trace GD + gradient evaluation (unbiased) [paper §3.1]
+      'fedprox'  — FedAvg + proximal term mu/2 ||w - w_t||^2      [paper baseline]
+    meta: FedMeta server meta-update after aggregation            [paper §3.2]
+    share: FedShare — inject globally shared samples into client batches.
+    """
+    algorithm: str = "uga"
+    meta: bool = True
+    share: bool = False
+    cohort: int = 16                    # clients per round (= C*K)
+    local_steps: int = 2                # total local steps; UGA: last = grad eval
+    client_lr: float = 0.002            # eta   (local SGD)
+    server_lr: float = 0.002            # eta_g (aggregation step size)
+    meta_lr: float = 0.002              # eta_meta
+    prox_mu: float = 2e-4               # FedProx coefficient
+    server_opt: str = "sgd"             # sgd | sgdm | adam | yogi
+    server_momentum: float = 0.0
+    cohort_strategy: str = "vmap"       # vmap (client-parallel) | scan (client-sequential)
+    remat_local_steps: bool = True      # jax.checkpoint each keep-trace step
+    lr_decay: float = 1.0               # multiplicative per-round client-lr decay
+    grad_agg_dtype: str = "float32"     # dtype of the aggregated gradient
+    clip_norm: float = 0.0              # >0: clip the aggregated gradient G
+                                        # (tames UGA's HVP amplification — the
+                                        # instability the paper notes in §4.5.1)
+
+    def __post_init__(self):
+        assert self.algorithm in ("fedavg", "uga", "fedprox"), self.algorithm
+        assert self.cohort_strategy in ("vmap", "scan"), self.cohort_strategy
+        assert self.local_steps >= 1

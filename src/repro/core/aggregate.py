@@ -1,0 +1,89 @@
+"""Unbiased weighted aggregation over the cohort (Eq. 14) and the two cohort
+execution strategies:
+
+  * ``vmap`` (client-parallel): every client's local trajectory runs
+    simultaneously — maximal throughput, per-client parameter copies live
+    at once (right for <~1B learners);
+  * ``scan`` (client-sequential): clients run one at a time and the weighted
+    gradient accumulates in the carry — one trajectory alive at a time over
+    FSDP-sharded parameters (right for 90B/398B learners).
+
+Both produce bit-identical math (property-tested).  Under pjit, the cohort
+axis of ``cohort_batch`` is sharded over the mesh (data, pod) axes so the
+weighted mean lowers to an all-reduce over ICI/DCN — the FL parameter-server
+gather, TPU-style.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+def weighted_mean(trees: PyTree, weights: jax.Array, dtype=jnp.float32):
+    """trees: pytree with leading cohort axis; weights: (cohort,) n_k."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+
+    def agg(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(x.astype(jnp.float32) * wx, axis=0).astype(dtype)
+
+    return jax.tree.map(agg, trees)
+
+
+def cohort_gradient(client_update: Callable, w_t: PyTree, cohort_batch: PyTree,
+                    client_weights: jax.Array, lr, rng, *,
+                    strategy: str = "vmap", agg_dtype=jnp.float32,
+                    spmd_axis_name=None, grad_shardings=None
+                    ) -> Tuple[PyTree, jax.Array]:
+    """Run ``client_update`` for every client and aggregate Eq.(14).
+
+    cohort_batch: leaves (cohort, b, ...); client_weights: (cohort,) = n_k.
+    ``spmd_axis_name`` (e.g. ("pod","data")) pins every per-client
+    intermediate — local parameter trajectories, per-client gradients — to
+    the mesh cohort axes instead of letting GSPMD replicate them (the 37x
+    HBM blow-up of §Perf iteration 1).  Returns (G, mean_client_loss)."""
+    cohort = client_weights.shape[0]
+    rngs = (jax.random.split(rng, cohort) if rng is not None
+            else jnp.zeros((cohort, 2), jnp.uint32))
+
+    if strategy == "vmap":
+        def one(batch, r):
+            return client_update(w_t, batch,
+                                 lr, r if rng is not None else None)
+        g_all, losses = jax.vmap(one, spmd_axis_name=spmd_axis_name)(
+            cohort_batch, rngs)
+        if grad_shardings is not None:
+            g_all = jax.lax.with_sharding_constraint(g_all, grad_shardings)
+        G = weighted_mean(g_all, client_weights, agg_dtype)
+        wsum = jnp.maximum(jnp.sum(client_weights.astype(jnp.float32)), 1e-30)
+        mean_loss = jnp.sum(losses * client_weights.astype(jnp.float32)) / wsum
+        return G, mean_loss
+
+    if strategy == "scan":
+        wsum = jnp.maximum(jnp.sum(client_weights.astype(jnp.float32)), 1e-30)
+
+        def body(carry, inp):
+            G_acc, l_acc = carry
+            batch, weight, r = inp
+            g_k, l_k = client_update(
+                w_t, batch, lr, r if rng is not None else None)
+            wk = weight.astype(jnp.float32) / wsum
+            G_acc = jax.tree.map(
+                lambda a, g: a + wk * g.astype(jnp.float32), G_acc, g_k)
+            return (G_acc, l_acc + wk * l_k), None
+
+        G0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), w_t)
+        body = jax.checkpoint(body, prevent_cse=False)
+        (G, mean_loss), _ = lax.scan(
+            body, (G0, jnp.zeros((), jnp.float32)),
+            (cohort_batch, client_weights, rngs))
+        G = jax.tree.map(lambda g: g.astype(agg_dtype), G)
+        return G, mean_loss
+
+    raise ValueError(strategy)

@@ -1,0 +1,30 @@
+"""FedMeta — controllable meta updating (§3.2, Algorithm 2).
+
+After aggregation the server takes one gradient step on the curated meta
+training set D_meta (Eq. 20), giving every round the same, *controllable*
+optimization objective regardless of which clients were sampled.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def meta_update(loss_fn: Callable, params: PyTree, meta_batch: PyTree,
+                meta_lr, rng=None) -> Tuple[PyTree, jax.Array]:
+    """w <- w - eta_meta * grad L(w; D_meta).  Returns (params, meta_loss)."""
+
+    def obj(w):
+        l, _ = loss_fn(w, meta_batch, rng)
+        return l
+
+    meta_loss, g = jax.value_and_grad(obj)(params)
+    new = jax.tree.map(
+        lambda p, gi: (p.astype(jnp.float32)
+                       - meta_lr * gi.astype(jnp.float32)).astype(p.dtype),
+        params, g)
+    return new, meta_loss

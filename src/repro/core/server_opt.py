@@ -1,0 +1,58 @@
+"""Server-side optimizers (FedOpt family).
+
+The aggregated quantity G is gradient-like: for UGA it is the *unbiased*
+gradient Eq.(14); for FedAvg/FedProx it is the pseudo-gradient
+(w_t - mean_k w_k) so that plain SGD with lr=1 reproduces vanilla FedAvg
+parameter averaging exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_state(name: str, params: PyTree) -> PyTree:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    if name == "sgd":
+        return {}
+    if name == "sgdm":
+        return {"m": zeros()}
+    if name in ("adam", "yogi"):
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+    raise ValueError(name)
+
+
+def apply(name: str, state: PyTree, params: PyTree, grad: PyTree, lr,
+          *, momentum: float = 0.9, b1: float = 0.9, b2: float = 0.99,
+          eps: float = 1e-8) -> Tuple[PyTree, PyTree]:
+    """Returns (new_params, new_state).  Math in fp32; params keep dtype."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grad)
+
+    def upd(p, d):
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+    if name == "sgd":
+        return jax.tree.map(upd, params, g32), state
+    if name == "sgdm":
+        m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], g32)
+        return jax.tree.map(upd, params, m), {"m": m}
+    if name in ("adam", "yogi"):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        if name == "adam":
+            v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                             state["v"], g32)
+        else:  # yogi
+            v = jax.tree.map(
+                lambda v, g: v - (1 - b2) * jnp.sign(v - g * g) * g * g,
+                state["v"], g32)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+        step = jax.tree.map(lambda m, v: m / (jnp.sqrt(v) + eps), mh, vh)
+        return (jax.tree.map(upd, params, step),
+                {"m": m, "v": v, "t": t})
+    raise ValueError(name)

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel.
+
+Accepts the framework's (B, S, H, D) layout, handles GQA head folding,
+padding to block multiples, and the interpret-mode switch (CPU validation
+vs TPU Mosaic lowering).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        if not causal:
+            raise ValueError("non-causal padding needs kv masking; pad "
+                             "inputs to block multiples instead")
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, q.shape[1], D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], D)
+    of = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    o = of.reshape(B, H, q.shape[1], D).transpose(0, 2, 1, 3)
+    return o[:, :Sq]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel (same (BH, S, D) layout)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (BH, Sq, D); k/v: (BHkv, Skv, D); kv head = q head // group."""
+    BH, Sq, D = q.shape
+    BHkv, Skv, _ = k.shape
+    group = BH // BHkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    rel = jnp.arange(Sq)[:, None] - jnp.arange(Skv)[None, :]
+    if causal:
+        s = jnp.where(rel >= 0, s, NEG_INF)
+    if window > 0:
+        s = jnp.where(rel < window, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(v.dtype)

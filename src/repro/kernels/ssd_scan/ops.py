@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the SSD-scan Pallas kernel.
+
+Takes the framework layout (B, S, H, P) + per-head A, handles head folding
+and group-broadcast B/C, interpret-mode switch for CPU validation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,) negative;
+    Bm/Cm: (B, S, H, N) (groups pre-broadcast).  Returns (B, S, H, P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    a = dt * A[None, None, :]                       # (B,S,H)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, t.shape[-1])
+    xf = fold(x)
+    dtf = fold(dt[..., None])
+    af = fold(a[..., None])
+    bf = fold(Bm)
+    cf = fold(Cm)
+    yf = ssd_scan_fwd(xf, dtf, af, bf, cf, chunk=chunk, interpret=interpret)
+    return yf.reshape(B, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,37 @@
+"""Mesh construction.  Functions, not module-level constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes, devices):
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production v5e meshes: one pod = 256 chips as (data=16, model=16);
+    two pods = 512 chips as (pod=2, data=16, model=16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)")
+    return _mesh(shape, axes, devices[:n])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, *, pod: int = 0):
+    """Small mesh for smoke tests (uses however many devices exist)."""
+    if pod:
+        return _mesh((pod, data, model), ("pod", "data", "model"),
+                     jax.devices()[:pod * data * model])
+    return _mesh((data, model), ("data", "model"),
+                 jax.devices()[:data * model])

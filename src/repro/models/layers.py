@@ -1,0 +1,137 @@
+"""Shared neural-net building blocks (pure-functional, pytree params).
+
+Conventions:
+  - params are nested dicts of jnp arrays;
+  - compute dtype follows the input activation dtype (bf16 on TPU), while
+    normalization statistics and softmax run in float32;
+  - initializers take an explicit PRNG key (no global state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                 # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv       # (..., S, d/2)
+    if x.ndim == ang.ndim + 1:                                 # head axis present
+        ang = ang[..., None, :]                                # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., ::2], x32[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int, dtype=jnp.float32):
+    """Classic transformer sinusoidal table (length, d) — whisper encoder."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    tab = jnp.zeros((length, d), dtype=jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(x, p):
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, d_ff, dtype),
+            "b_in": jnp.zeros((d_ff,), dtype),
+            "w_out": dense_init(k2, d_ff, d, dtype),
+            "b_out": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp(x, p):
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy; logits (..., V) fp-any, labels (...) int32.
+
+    mask (...) in {0,1} optionally excludes positions (padding)."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(hit)

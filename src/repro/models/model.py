@@ -1,0 +1,106 @@
+"""Unified Model API — the object the federated runtime and the launchers
+consume.  A :class:`Model` bundles init / loss / prefill / decode for one
+architecture so that the FL algorithms (repro.core) stay model-agnostic,
+exactly as the paper requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.layers import accuracy, softmax_xent
+
+PyTree = Any
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """init(key) -> params; loss(params, batch, rng) -> (loss, metrics);
+    prefill(params, batch) -> (logits, cache);
+    decode(params, tokens, cache) -> (logits, cache)."""
+    name: str
+    init: Callable[..., PyTree]
+    loss: Callable[..., Any]
+    prefill: Optional[Callable[..., Any]] = None
+    decode: Optional[Callable[..., Any]] = None
+    make_cache: Optional[Callable[..., PyTree]] = None
+    cfg: Any = None
+
+
+def build_model(cfg: ArchConfig, *, dtype=None, remat: bool = True,
+                decode_window: int = 0, loss_chunk: int = 2048) -> Model:
+    """Build the transformer-family model for an assigned architecture.
+
+    decode_window > 0 selects the sliding-window decode variant (ring-buffer
+    cache of that size) — used by the ``long_500k`` shape for dense archs.
+    """
+
+    def init(key):
+        return transformer.init_transformer(cfg, key, dtype)
+
+    def loss(params, batch: Batch, rng=None):
+        return transformer.lm_loss_chunked(
+            params, batch["tokens"], cfg,
+            enc_embeds=batch.get("enc_embeds"), mask=batch.get("mask"),
+            remat=remat, chunk=loss_chunk)
+
+    def prefill(params, batch: Batch, cache_len: Optional[int] = None):
+        # return_hidden: only the LAST position goes through the vocab
+        # projection — the full (B, S, V) logits would dominate prefill HBM
+        # at 32k x 100-200k vocab (§Perf it.8)
+        h, aux, cache = transformer.forward(
+            params, batch["tokens"], cfg,
+            enc_embeds=batch.get("enc_embeds"), collect_cache=True,
+            remat=remat, return_hidden=True)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"])
+        logits_last = h[:, -1] @ head
+        if cache_len is not None:
+            cache = transformer.pad_cache(cache, cfg, cache_len)
+        return logits_last, cache
+
+    def decode(params, tokens, cache):
+        return transformer.decode_step(params, tokens, cache, cfg,
+                                       window=decode_window)
+
+    def make_cache(batch: int, cache_len: int):
+        return transformer.make_cache(cfg, batch, cache_len, dtype,
+                                      window=decode_window)
+
+    return Model(name=cfg.name, init=init, loss=loss, prefill=prefill,
+                 decode=decode, make_cache=make_cache, cfg=cfg)
+
+
+def build_paper_cnn(cfg, *_, **__) -> Model:
+    from repro.configs.paper_models import CNNConfig
+    from repro.models import smallnets
+    assert isinstance(cfg, CNNConfig)
+
+    def loss(params, batch, rng=None):
+        logits = smallnets.cnn_apply(params, cfg, batch["x"], rng=rng)
+        l = softmax_xent(logits, batch["y"])
+        return l, {"xent": l, "acc": accuracy(logits, batch["y"])}
+
+    return Model(name=cfg.name, init=lambda k: smallnets.cnn_init(cfg, k),
+                 loss=loss, cfg=cfg)
+
+
+def build_paper_gru(cfg, *_, **__) -> Model:
+    from repro.configs.paper_models import GRUConfig
+    from repro.models import smallnets
+    assert isinstance(cfg, GRUConfig)
+
+    def loss(params, batch, rng=None):
+        tokens = batch["tokens"]
+        logits = smallnets.gru_apply(params, cfg, tokens[:, :-1])
+        l = softmax_xent(logits, tokens[:, 1:])
+        return l, {"xent": l, "acc": accuracy(logits, tokens[:, 1:])}
+
+    return Model(name=cfg.name, init=lambda k: smallnets.gru_init(cfg, k),
+                 loss=loss, cfg=cfg)

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts FFN (top-k routing, capacity-based).
+
+Two dispatch implementations:
+
+  * ``moe_ffn`` (default) — **gather/scatter dispatch**: expert slot
+    assignments are computed as integer indices (scatter for slot->token,
+    gather for token->slot), so dispatch/combine cost O(G*E*C*d) memory and
+    ZERO matmul FLOPs.  The Switch-style dense (G,S,E,C) one-hot einsum
+    formulation costs O(G*S*E*C) memory (quadratic in group size — 10+ GB
+    per chip for deepseek's E=64, K=6 at 4k sequences, §Perf iteration 4)
+    and E*C*d matmul FLOPs per token.
+
+  * ``moe_ffn_einsum`` — the dense einsum reference (kept as the oracle;
+    equality is property-tested).
+
+Tokens are grouped (``group_size`` per group); each expert accepts
+``capacity = ceil(top_k * group_size / E * capacity_factor)`` tokens per
+group; overflow drops (standard capacity semantics; the aux loss keeps load
+balanced).  The expert axis shards over the mesh ``model`` axis (GSPMD
+inserts the all-to-alls).  UGA's second-order gradient flows through the
+router via the combine weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init
+
+# Mesh axis that owns the expert dimension of activations (set by the
+# launcher; None = let GSPMD choose).  A module-level hint rather than a
+# config field because it is a property of the launch mesh, not the model.
+EXPERT_AXIS = None
+
+# Dispatch implementation selector ("gather" | "einsum") — both are exact
+# (property-tested equal); they trade FLOPs (einsum pays O(E*C*d) dispatch
+# matmuls) against GSPMD friendliness (gather's scatter-add backward lowers
+# to replicate+all-reduce under sharded operands: 5x collective bytes and
+# 6x HBM on deepseek train — EXPERIMENTS.md §Perf it.6).  einsum wins.
+MOE_IMPL = "einsum"
+
+
+def set_moe_impl(impl: str):
+    global MOE_IMPL
+    assert impl in ("gather", "einsum")
+    MOE_IMPL = impl
+
+
+def set_expert_axis(axis):
+    global EXPERT_AXIS
+    EXPERT_AXIS = axis
+
+
+def _constrain_experts(x, spec_builder):
+    if EXPERT_AXIS is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, spec_builder(P, EXPERT_AXIS))
+    except Exception:   # no ambient mesh (smoke tests) — hint is best-effort
+        return x
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, d_ff_dense: int, dtype=jnp.float32):
+    de = cfg.d_expert or d_ff_dense
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E = cfg.num_experts
+    p = {
+        "router": dense_init(k_r, d_model, E, jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(k_g, (E, d_model, de)) / math.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(k_u, (E, d_model, de)) / math.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(k_d, (E, de, d_model)) / math.sqrt(de)).astype(dtype),
+    }
+    if cfg.num_shared:
+        ks = jax.random.split(k_s, 3)
+        ds = (cfg.d_expert or d_ff_dense) * cfg.num_shared
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], d_model, ds, dtype),
+            "w_up": dense_init(ks[1], d_model, ds, dtype),
+            "w_down": dense_init(ks[2], ds, d_model, dtype),
+        }
+    return p
+
+
+def _route(xg, p, cfg: MoEConfig):
+    """Shared routing math.  xg: (G, S, d).
+    Returns (gate_vals, expert_idx, pos_in_e, keep, probs, C)."""
+    G, S, _ = xg.shape
+    E, K = cfg.num_experts, cfg.top_k
+    logits = xg.astype(jnp.float32) @ p["router"]              # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    C = max(int(math.ceil(K * S / E * cfg.capacity_factor)), 1)
+    # position of each (token, k) inside its expert queue, priority k=0 first
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (G,S,K,E)
+    oh_flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * S, E)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - oh_flat
+    pos = pos_flat.reshape(G, K, S, E).transpose(0, 2, 1, 3)   # (G,S,K,E)
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)                  # (G,S,K)
+    keep = pos_in_e < C
+    return gate_vals, expert_idx, pos_in_e, keep, probs, C
+
+
+def _aux_loss(probs, expert_idx, cfg: MoEConfig):
+    E = cfg.num_experts
+    me = jnp.mean(probs, axis=1)                               # (G,E)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E,
+                                 dtype=jnp.float32), axis=1)
+    return cfg.aux_loss_coef * E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+
+def _group(x, cfg: MoEConfig):
+    d = x.shape[-1]
+    tokens = x.reshape(-1, d)
+    T = tokens.shape[0]
+    gs = min(cfg.group_size, T)
+    pad = (-T) % gs
+    if pad:
+        tokens = jnp.concatenate(
+            [tokens, jnp.zeros((pad, d), tokens.dtype)], axis=0)
+    return tokens.reshape(-1, gs, d), T, pad
+
+
+def moe_ffn(x, p, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch per the MOE_IMPL selector."""
+    if MOE_IMPL == "einsum":
+        return moe_ffn_einsum(x, p, cfg)
+    return moe_ffn_gather(x, p, cfg)
+
+
+def moe_ffn_gather(x, p, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """Gather/scatter dispatch.  x: (..., S, d) -> (same, aux_loss)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xg, T, pad = _group(x, cfg)
+    G, S, _ = xg.shape
+    E, K = cfg.num_experts, cfg.top_k
+    gate_vals, expert_idx, pos_in_e, keep, probs, C = _route(xg, p, cfg)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # ---- dispatch: scatter token ids into (G, E, C) slots, then gather ----
+    gidx = jnp.arange(G)[:, None, None]
+    s_idx = jnp.broadcast_to(jnp.arange(S)[None, :, None], (G, S, K))
+    slot_src = jnp.zeros((G, E, C), jnp.int32)
+    # dropped (keep=False) entries write to a scratch slot via clamped pos
+    pos_w = jnp.where(keep, pos_in_e, C - 1)
+    slot_src = slot_src.at[gidx, expert_idx, pos_w].max(
+        jnp.where(keep, s_idx + 1, 0))         # +1: 0 means empty slot
+    slot_valid = slot_src > 0
+    slot_tok = jnp.maximum(slot_src - 1, 0)                    # (G,E,C)
+    xe = jnp.take_along_axis(
+        xg, slot_tok.reshape(G, E * C)[..., None], axis=1
+    ).reshape(G, E, C, d)
+    xe = xe * slot_valid[..., None].astype(xe.dtype)
+
+    # ---- expert FFN: (E, G*C, d) x (E, d, de) ----
+    xe_f = xe.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+    xe_f = _constrain_experts(xe_f, lambda P, a: P(a, None, None))
+    h = jax.nn.silu(jnp.einsum("end,edf->enf", xe_f, p["w_gate"])) * \
+        jnp.einsum("end,edf->enf", xe_f, p["w_up"])
+    ye_f = jnp.einsum("enf,efd->end", h, p["w_down"])
+    ye_f = _constrain_experts(ye_f, lambda P, a: P(a, None, None))
+    ye = ye_f.reshape(E, G, C, d).transpose(1, 0, 2, 3)        # (G,E,C,d)
+
+    # ---- combine: gather each token's K expert outputs ----
+    flat_slot = (expert_idx * C + pos_w).reshape(G, S * K)     # (G,S*K)
+    yk = jnp.take_along_axis(
+        ye.reshape(G, E * C, d), flat_slot[..., None], axis=1
+    ).reshape(G, S, K, d)
+    y = jnp.sum(yk * gate_vals[..., None].astype(yk.dtype), axis=2)
+
+    if "shared" in p:
+        from repro.models.layers import swiglu
+        y = y + swiglu(xg, p["shared"])
+
+    aux = _aux_loss(probs, expert_idx, cfg)
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:T]
+    return y.reshape(orig_shape), aux
+
+
+def moe_ffn_einsum(x, p, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """Dense one-hot einsum dispatch (Switch-Transformer formulation) —
+    reference implementation / oracle for ``moe_ffn``."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xg, T, pad = _group(x, cfg)
+    G, S, _ = xg.shape
+    E, K = cfg.num_experts, cfg.top_k
+    gate_vals, expert_idx, pos_in_e, keep, probs, C = _route(xg, p, cfg)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    combine = jnp.einsum(
+        "gske,gskc->gsec",
+        onehot * gate_vals[..., None],
+        jax.nn.one_hot(pos_in_e, C, dtype=jnp.float32) * keep[..., None])
+    dispatch = (combine > 0).astype(xg.dtype)                  # (G,S,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(ye.dtype), ye)
+
+    if "shared" in p:
+        from repro.models.layers import swiglu
+        y = y + swiglu(xg, p["shared"])
+
+    aux = _aux_loss(probs, expert_idx, cfg)
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:T]
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,140 @@
+"""The paper's own experimental models (§4.1.2, §4.2.2, §4.3.2).
+
+- FedAvg CNN for split CIFAR-10 / FEMNIST: conv5x5 -> relu -> maxpool, twice,
+  then fully-connected layers with ReLU + dropout and a softmax output.
+- Character-level GRU for Shakespeare: embed(256) -> GRU(1024) -> softmax.
+
+Pure-functional (params pytrees), CPU-trainable — used by the paper-claim
+validation benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.paper_models import CNNConfig, GRUConfig
+from repro.models.layers import dense_init, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+def cnn_init(cfg: CNNConfig, key):
+    keys = jax.random.split(key, 2 + len(cfg.fc) + 1)
+    c1, c2 = cfg.conv_channels
+    k = cfg.conv_kernel
+    params = {
+        "conv1_w": jax.random.normal(keys[0], (k, k, cfg.in_channels, c1))
+        * math.sqrt(2.0 / (k * k * cfg.in_channels)),
+        "conv1_b": jnp.zeros((c1,)),
+        "conv2_w": jax.random.normal(keys[1], (k, k, c1, c2))
+        * math.sqrt(2.0 / (k * k * c1)),
+        "conv2_b": jnp.zeros((c2,)),
+    }
+    # infer flattened dim
+    s = cfg.image_size
+    for _ in range(2):
+        s = _pooled_size(s, cfg.pool, cfg.pool_stride)
+    d = s * s * c2
+    dims = (d,) + cfg.fc + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        # He-style hidden init; small final layer (init loss ~ ln(classes),
+        # soft initial curvature — keeps UGA's HVP sweep well-conditioned)
+        scale = math.sqrt(2.0 / dims[i])
+        if i == len(dims) - 2:
+            scale *= 0.1
+        params[f"fc{i}_w"] = dense_init(keys[2 + i], dims[i], dims[i + 1],
+                                        scale=scale)
+        params[f"fc{i}_b"] = jnp.zeros((dims[i + 1],))
+    return params
+
+
+def _pooled_size(s: int, pool: int, stride: int) -> int:
+    return (s - pool) // stride + 1
+
+
+def _maxpool(x, pool: int, stride: int):
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, pool, pool, 1), (1, stride, stride, 1),
+                             "VALID")
+
+
+def cnn_apply(params, cfg: CNNConfig, images, *, rng: Optional[jax.Array] = None):
+    """images: (B, H, W, C) float32 -> logits (B, num_classes)."""
+    x = images
+    for i, (w, b) in enumerate(((params["conv1_w"], params["conv1_b"]),
+                                (params["conv2_w"], params["conv2_b"]))):
+        x = lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        x = jax.nn.relu(x)
+        x = _maxpool(x, cfg.pool, cfg.pool_stride)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fc) + 1
+    for i in range(n_fc):
+        x = x @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+            if rng is not None and cfg.dropout > 0:
+                rng, sub = jax.random.split(rng)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, x.shape)
+                x = jnp.where(keep, x / (1 - cfg.dropout), 0.0)
+    return x
+
+
+def cnn_loss(params, cfg: CNNConfig, batch, rng=None):
+    logits = cnn_apply(params, cfg, batch["x"], rng=rng)
+    return softmax_xent(logits, batch["y"])
+
+
+# ---------------------------------------------------------------------------
+# GRU char-LM
+# ---------------------------------------------------------------------------
+def gru_init(cfg: GRUConfig, key):
+    ke, kz, kr, kh, ko = jax.random.split(key, 5)
+    e, h = cfg.embed_dim, cfg.hidden
+
+    def gate(k):
+        k1, k2 = jax.random.split(k)
+        return {"wx": dense_init(k1, e, h), "wh": dense_init(k2, h, h),
+                "b": jnp.zeros((h,))}
+
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, e)) * 0.02,
+        "z": gate(kz), "r": gate(kr), "h": gate(kh),
+        "out_w": dense_init(ko, h, cfg.vocab_size),
+        "out_b": jnp.zeros((cfg.vocab_size,)),
+    }
+
+
+def _gru_cell(params, x, h):
+    z = jax.nn.sigmoid(x @ params["z"]["wx"] + h @ params["z"]["wh"] + params["z"]["b"])
+    r = jax.nn.sigmoid(x @ params["r"]["wx"] + h @ params["r"]["wh"] + params["r"]["b"])
+    hh = jnp.tanh(x @ params["h"]["wx"] + (r * h) @ params["h"]["wh"] + params["h"]["b"])
+    return (1 - z) * h + z * hh
+
+
+def gru_apply(params, cfg: GRUConfig, tokens):
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]                      # (B,S,e)
+
+    def step(h, xt):
+        h = _gru_cell(params, xt, h)
+        return h, h
+
+    h0 = jnp.zeros((B, cfg.hidden))
+    _, hs = lax.scan(step, h0, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                       # (B,S,hidden)
+    return hs @ params["out_w"] + params["out_b"]
+
+
+def gru_loss(params, cfg: GRUConfig, batch, rng=None):
+    """Next-char prediction: batch {'tokens': (B,S)} — shift internally."""
+    tokens = batch["tokens"]
+    logits = gru_apply(params, cfg, tokens[:, :-1])
+    return softmax_xent(logits, tokens[:, 1:])

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) block, pure-JAX reference path.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+recurrence is computed as a masked quadratic form (MXU-friendly); across
+chunks a sequential ``lax.scan`` carries the (H, N, P) state.  The Pallas
+kernel in ``repro.kernels.ssd_scan`` implements the same chunk body with
+explicit VMEM tiling; this module is its oracle.
+
+Block layout (mamba2):
+  in_proj -> [z | x | B | C | dt]; causal depthwise conv over [x|B|C];
+  dt = softplus(dt + bias); a = dt * A (A = -exp(A_log) per head);
+  y = SSD(x, a, dt, B, C) + D * x;  out = out_proj(y * silu(z)).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (the compute core)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """x: (B, S, H, P); dt: (B, S, H) (already softplus'ed); A: (H,) negative;
+    Bm/Cm: (B, S, H, N) (groups already broadcast to heads).
+    Returns (y: (B, S, H, P), h_final: (B, H, N, P))."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
+    nc = x.shape[1] // L
+
+    a = dt * A[None, None, :]                                  # (B,S,H) <= 0
+    rs = lambda t: t.reshape((B_, nc, L) + t.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+    xc, dtc, ac, Bc, Cc = rs(x), rs(dt), rs(a), rs(Bm), rs(Cm)  # (nc,B,L,...)
+
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, N, P), jnp.float32)
+
+    def chunk_step(h_prev, inp):
+        xk, dtk, ak, Bk, Ck = inp                              # (B,L,...)
+        ak = ak.astype(jnp.float32)
+        acum = jnp.cumsum(ak, axis=1)                          # (B,L,H) inclusive
+        # ---- intra-chunk (quadratic) ----
+        seg = acum[:, :, None, :] - acum[:, None, :, :]        # (B,t,s,H)
+        tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], seg, -jnp.inf))
+        scores = jnp.einsum("blhn,bmhn->blmh", Ck, Bk,
+                            preferred_element_type=jnp.float32)
+        M = scores * decay                                     # (B,t,s,H)
+        xdt = xk.astype(jnp.float32) * dtk[..., None]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", M, xdt)
+        # ---- contribution of the incoming state ----
+        y_inter = jnp.einsum("blhn,bhnp->blhp",
+                             Ck.astype(jnp.float32) * jnp.exp(acum)[..., None],
+                             h_prev)
+        # ---- state update ----
+        decay_to_end = jnp.exp(acum[:, -1:, :] - acum)         # (B,L,H)
+        h_new = (jnp.exp(acum[:, -1])[:, :, None, None] * h_prev +
+                 jnp.einsum("blhn,blhp->bhnp",
+                            Bk.astype(jnp.float32) * decay_to_end[..., None],
+                            xdt))
+        return h_new, (y_intra + y_inter)
+
+    h_final, ys = lax.scan(chunk_step, h0, (xc, dtc, ac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, nc * L, H, P)
+    return y[:, :S].astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, h):
+    """Single-token SSD update.  x: (B,H,P); dt: (B,H); Bm/Cm: (B,H,N);
+    h: (B,H,N,P).  Returns (y: (B,H,P), h_new)."""
+    a = jnp.exp((dt * A[None, :]).astype(jnp.float32))         # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    h_new = (a[..., None, None] * h +
+             jnp.einsum("bhn,bhp->bhnp", Bm.astype(jnp.float32), xdt))
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width d_conv) over the channel-last layout
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, cache: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (d_conv, C).  cache: (B, d_conv-1, C) past inputs.
+    Returns (y: (B,S,C), new_cache)."""
+    dconv = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], dconv - 1, x.shape[-1]), x.dtype)
+    ext = jnp.concatenate([cache, x], axis=1)                  # (B, S+dc-1, C)
+    y = sum(ext[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dconv))
+    new_cache = ext[:, -(dconv - 1):] if dconv > 1 else cache
+    return y, new_cache
+
+
+def causal_conv_step(x, w, cache):
+    """One token: x (B, C); cache (B, d_conv-1, C)."""
+    dconv = w.shape[0]
+    ext = jnp.concatenate([cache, x[:, None]], axis=1)         # (B, dc, C)
+    y = jnp.einsum("bkc,kc->bc", ext, w)
+    return y, ext[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 mixer block
+# ---------------------------------------------------------------------------
+def mamba_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.d_head
+    G, N = cfg.n_groups, cfg.d_state
+    conv_dim = d_in + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, d_model, 2 * d_in + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.d_conv, conv_dim))
+                   / math.sqrt(cfg.d_conv)).astype(dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(k3, d_in, d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_in: int, G: int, N: int, H: int):
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + G * N]
+    Cm = zxbcdt[..., 2 * d_in + G * N:2 * d_in + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * G * N:]
+    return z, x, Bm, Cm, dt
+
+
+def mamba_block(u, p, cfg: SSMConfig):
+    """u: (B, S, d_model) -> (B, S, d_model). Train / prefill (full seq)."""
+    B_, S, d_model = u.shape
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.d_head
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.d_head
+
+    zxbcdt = u @ p["in_proj"]
+    z, xr, Bm, Cm, dt = _split_proj(zxbcdt, d_in, G, N, H)
+    xbc, _ = causal_conv(jnp.concatenate([xr, Bm, Cm], axis=-1), p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xr, Bm, Cm = (xbc[..., :d_in], xbc[..., d_in:d_in + G * N],
+                  xbc[..., d_in + G * N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    x_h = xr.reshape(B_, S, H, P)
+    rep = H // G
+    B_h = jnp.repeat(Bm.reshape(B_, S, G, N), rep, axis=2)
+    C_h = jnp.repeat(Cm.reshape(B_, S, G, N), rep, axis=2)
+    y, _ = ssd_chunked(x_h, dt, A, B_h, C_h, cfg.chunk)
+    y = y + x_h * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, d_in) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_make_cache(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.d_head
+    conv_dim = d_in + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.d_state, cfg.d_head), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_block_decode(u, p, cfg: SSMConfig, cache):
+    """u: (B, d_model) one token; cache: {'ssm', 'conv'}."""
+    B_, d_model = u.shape
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.d_head
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.d_head
+
+    zxbcdt = u @ p["in_proj"]
+    z, xr, Bm, Cm, dt = _split_proj(zxbcdt, d_in, G, N, H)
+    xbc, conv_cache = causal_conv_step(
+        jnp.concatenate([xr, Bm, Cm], axis=-1), p["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xr, Bm, Cm = (xbc[..., :d_in], xbc[..., d_in:d_in + G * N],
+                  xbc[..., d_in + G * N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    rep = H // G
+    x_h = xr.reshape(B_, H, P)
+    B_h = jnp.repeat(Bm.reshape(B_, G, N), rep, axis=1)
+    C_h = jnp.repeat(Cm.reshape(B_, G, N), rep, axis=1)
+    y, ssm = ssd_decode_step(x_h, dt, A, B_h, C_h, cache["ssm"])
+    y = y + x_h * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B_, d_in) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"ssm": ssm, "conv": conv_cache}

@@ -1,0 +1,526 @@
+"""Unified transformer stack covering all assigned architecture families.
+
+The stack is organized in *periods*: the layer-kind pattern of an
+architecture (e.g. jamba's ``mmmmAmmm`` with MoE every other layer) repeats
+with period ``P = lcm(attn_period, cross_every, moe.every)``; parameters for
+each position-in-period are stacked over ``num_layers // P`` and the whole
+network is a single ``lax.scan`` over periods (bounded HLO size for 100-layer
+models, per-period ``jax.checkpoint`` for activation memory).
+
+Families:
+  dense   — GQA attention + SwiGLU           (phi3, minicpm, smollm)
+  moe     — + capacity-based MoE FFN         (llama4-scout) / MLA (deepseek)
+  ssm     — mamba2 SSD blocks, no MLP        (mamba2-780m)
+  hybrid  — 1:7 attn:mamba interleave + MoE  (jamba)
+  vlm     — cross-attn image layers, stub projector  (llama-3.2-vision)
+  audio   — whisper enc-dec, stub frame embeddings   (whisper-large-v3)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ATTN, ArchConfig, CROSS, MAMBA
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (dense_init, embed_init, gelu_mlp,
+                                 gelu_mlp_init, layernorm, rmsnorm,
+                                 sinusoidal_positions, swiglu, swiglu_init)
+from repro.models.moe import moe_ffn, moe_init
+
+PyTree = Any
+
+# Optional sharding hint for residual-stream activations (B, S, d), set by
+# the launcher (repro.models.moe.EXPERT_AXIS-style module hint): GSPMD loses
+# the batch-dim sharding through vmap+scan+custom_vjp boundaries and
+# replicates per-client compute across the model axis (§Perf it.5) — the
+# constraint pins it.  None = let GSPMD choose (smoke tests, no mesh).
+ACT_SPEC = None
+
+
+def set_activation_spec(spec):
+    global ACT_SPEC
+    ACT_SPEC = spec
+
+
+def _constrain_act(h):
+    if ACT_SPEC is None:
+        return h
+    try:
+        return jax.lax.with_sharding_constraint(h, ACT_SPEC)
+    except Exception:   # no ambient mesh — hint is best-effort
+        return h
+
+
+def _lcm(*xs):
+    out = 1
+    for x in xs:
+        x = max(int(x), 1)
+        out = out * x // math.gcd(out, x)
+    return out
+
+
+def period_of(cfg: ArchConfig) -> int:
+    p = _lcm(cfg.attn_period, cfg.cross_every or 1,
+             cfg.moe.every if cfg.moe else 1)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return p
+
+
+def _dtype(cfg: ArchConfig, override=None):
+    return override or jnp.dtype(cfg.dtype)
+
+
+def _has_moe(cfg: ArchConfig, j: int) -> bool:
+    return cfg.moe is not None and (j % cfg.moe.every == cfg.moe.every - 1)
+
+
+def _has_mlp(cfg: ArchConfig, j: int) -> bool:
+    return _has_moe(cfg, j) or cfg.d_ff > 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ArchConfig, kind: str, j: int, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.ones((d,), jnp.float32)}
+    if kind == MAMBA:
+        p["mamba"] = ssm_lib.mamba_init(ks[0], d, cfg.ssm, dtype)
+    elif cfg.mla is not None and kind == ATTN:
+        p["attn"] = attn_lib.mla_init(ks[0], d, cfg.num_heads, hd,
+                                      cfg.mla.kv_lora_rank,
+                                      cfg.mla.rope_head_dim, dtype)
+    else:  # ATTN or CROSS with plain GQA
+        p["attn"] = attn_lib.gqa_init(ks[0], d, cfg.num_heads,
+                                      cfg.num_kv_heads, hd, dtype)
+    if _has_mlp(cfg, j):
+        p["norm2"] = jnp.ones((d,), jnp.float32)
+        if _has_moe(cfg, j):
+            p["mlp"] = moe_init(ks[1], d, cfg.moe, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = swiglu_init(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def _init_encoder(key, cfg: ArchConfig, dtype):
+    enc = cfg.encoder
+    p: Dict[str, Any] = {}
+    if enc.enc_dim != cfg.d_model:
+        p["proj"] = dense_init(key, enc.enc_dim, cfg.d_model, dtype)
+    if enc.enc_layers > 0:
+        eff = enc.enc_ff or 4 * enc.enc_dim
+        hd = enc.enc_dim // enc.enc_heads
+
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1_s": jnp.ones((enc.enc_dim,), jnp.float32),
+                "ln1_b": jnp.zeros((enc.enc_dim,), jnp.float32),
+                "attn": attn_lib.gqa_init(k1, enc.enc_dim, enc.enc_heads,
+                                          enc.enc_heads, hd, dtype),
+                "ln2_s": jnp.ones((enc.enc_dim,), jnp.float32),
+                "ln2_b": jnp.zeros((enc.enc_dim,), jnp.float32),
+                "mlp": gelu_mlp_init(k2, enc.enc_dim, eff, dtype),
+            }
+
+        p["layers"] = jax.vmap(one)(jax.random.split(key, enc.enc_layers))
+        p["ln_f_s"] = jnp.ones((enc.enc_dim,), jnp.float32)
+        p["ln_f_b"] = jnp.zeros((enc.enc_dim,), jnp.float32)
+    return p
+
+
+def init_transformer(cfg: ArchConfig, key, dtype=None) -> PyTree:
+    dtype = _dtype(cfg, dtype)
+    prd = period_of(cfg)
+    n_periods = cfg.num_layers // prd
+    kinds = cfg.layer_kinds()[:prd]
+    k_embed, k_head, k_enc, *k_blocks = jax.random.split(key, 3 + prd)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    blocks = []
+    for j, kind in enumerate(kinds):
+        init_j = partial(_init_layer, cfg=cfg, kind=kind, j=j, dtype=dtype)
+        blocks.append(jax.vmap(lambda k: init_j(k))(
+            jax.random.split(k_blocks[j], n_periods)))
+    params["blocks"] = tuple(blocks)
+    if cfg.encoder is not None:
+        params["encoder"] = _init_encoder(k_enc, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Encoder (stub frontend -> optional transformer encoder)
+# ---------------------------------------------------------------------------
+def encode(params: PyTree, enc_embeds, cfg: ArchConfig):
+    """enc_embeds: (B, L, enc_dim) precomputed frame/patch embeddings
+    (the modality frontend stub).  Returns (B, L, d_model)."""
+    enc = cfg.encoder
+    p = params.get("encoder", {})
+    h = enc_embeds
+    if enc.enc_layers > 0:
+        h = h + sinusoidal_positions(h.shape[1], enc.enc_dim, h.dtype)[None]
+
+        def enc_layer(h, lp):
+            a_in = layernorm(h, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+            q, k, v = attn_lib.gqa_project_qkv(
+                a_in, lp["attn"], enc.enc_heads, enc.enc_heads,
+                enc.enc_dim // enc.enc_heads)
+            a = attn_lib.attend(q, k, v, causal=False)
+            h = h + a.reshape(h.shape[0], h.shape[1], -1) @ lp["attn"]["wo"]
+            m_in = layernorm(h, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+            return h + gelu_mlp(m_in, lp["mlp"]), None
+
+        h, _ = lax.scan(jax.checkpoint(enc_layer), h, p["layers"])
+        h = layernorm(h, p["ln_f_s"], p["ln_f_b"], cfg.norm_eps)
+    if "proj" in p:
+        h = h @ p["proj"]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_layer(h, lp, kind: str, j: int, cfg: ArchConfig, positions,
+                 enc_out, collect_cache: bool):
+    """One sub-layer of a period.  Returns (h, aux, cache_entry)."""
+    B, S, d = h.shape
+    hd = cfg.resolved_head_dim
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    x = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+    if kind == MAMBA:
+        if collect_cache:
+            # prefill: need the final SSD + conv state — rerun pieces inline
+            y, cache_entry = _mamba_prefill(x, lp["mamba"], cfg)
+        else:
+            y = ssm_lib.mamba_block(x, lp["mamba"], cfg.ssm)
+    elif cfg.mla is not None and kind == ATTN:
+        y = attn_lib.mla_attention(
+            x, lp["attn"], positions, num_heads=cfg.num_heads, head_dim=hd,
+            rope_head_dim=cfg.mla.rope_head_dim, rope_theta=cfg.rope_theta)
+        if collect_cache:
+            ckv = x @ lp["attn"]["w_dkv"]
+            krope = attn_lib.apply_rope_1h(x @ lp["attn"]["w_kr"], positions,
+                                           cfg.rope_theta)
+            cache_entry = {"ckv": ckv, "krope": krope}
+    elif kind == CROSS:
+        q = (x @ lp["attn"]["wq"]).reshape(B, S, cfg.num_heads, hd)
+        ek = (enc_out @ lp["attn"]["wk"]).reshape(
+            B, enc_out.shape[1], cfg.num_kv_heads, hd)
+        ev = (enc_out @ lp["attn"]["wv"]).reshape(
+            B, enc_out.shape[1], cfg.num_kv_heads, hd)
+        a = attn_lib.attend(q, ek, ev, causal=False)
+        y = a.reshape(B, S, -1) @ lp["attn"]["wo"]
+        if collect_cache:
+            cache_entry = {"k": ek, "v": ev}
+    else:  # plain GQA self-attention
+        from repro.models.layers import apply_rope
+        q, k, v = attn_lib.gqa_project_qkv(x, lp["attn"], cfg.num_heads,
+                                           cfg.num_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        a = attn_lib.attend(q, k, v, causal=True)
+        y = a.reshape(B, S, -1) @ lp["attn"]["wo"]
+        if collect_cache:
+            cache_entry = {"k": k, "v": v}
+    h = h + y
+    if "mlp" in lp:
+        x2 = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+        if _has_moe(cfg, j):
+            y2, a = moe_ffn(x2, lp["mlp"], cfg.moe)
+            aux = aux + a
+        else:
+            y2 = swiglu(x2, lp["mlp"])
+        h = h + y2
+    return h, aux, cache_entry
+
+
+def _mamba_prefill(x, p, cfg: ArchConfig):
+    """mamba_block that also returns the end-of-sequence decode cache."""
+    s = cfg.ssm
+    B_, S, d_model = x.shape
+    d_in = s.expand * d_model
+    H = d_in // s.d_head
+    G, N, P = s.n_groups, s.d_state, s.d_head
+    zxbcdt = x @ p["in_proj"]
+    z, xr, Bm, Cm, dt = ssm_lib._split_proj(zxbcdt, d_in, G, N, H)
+    xbc_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc, _ = ssm_lib.causal_conv(xbc_in, p["conv_w"])
+    conv_cache = xbc_in[:, -(s.d_conv - 1):] if s.d_conv > 1 else \
+        jnp.zeros((B_, 0, xbc_in.shape[-1]), xbc_in.dtype)
+    xbc = jax.nn.silu(xbc)
+    xr, Bm, Cm = (xbc[..., :d_in], xbc[..., d_in:d_in + G * N],
+                  xbc[..., d_in + G * N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    rep = H // G
+    x_h = xr.reshape(B_, S, H, P)
+    B_h = jnp.repeat(Bm.reshape(B_, S, G, N), rep, axis=2)
+    C_h = jnp.repeat(Cm.reshape(B_, S, G, N), rep, axis=2)
+    y, h_final = ssm_lib.ssd_chunked(x_h, dt, A, B_h, C_h, s.chunk)
+    y = y + x_h * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, d_in) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"ssm": h_final, "conv": conv_cache}
+
+
+def forward(params: PyTree, tokens, cfg: ArchConfig, *,
+            enc_embeds=None, collect_cache: bool = False,
+            remat: bool = True, return_hidden: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    Returns (logits, aux_loss) or (logits, aux_loss, cache) when
+    ``collect_cache`` (prefill).  With ``return_hidden`` the first element
+    is the pre-head hidden state (B, S, d) instead of logits — used by the
+    chunked LM loss to avoid materializing the full (B, S, V) logits."""
+    B, S = tokens.shape
+    prd = period_of(cfg)
+    kinds = cfg.layer_kinds()[:prd]
+    h = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.rope_theta <= 0:  # whisper-style: absolute sinusoidal positions
+        h = h + sinusoidal_positions(S, cfg.d_model, h.dtype)[None]
+    enc_out = None
+    if cfg.encoder is not None:
+        assert enc_embeds is not None, "encoder arch needs enc_embeds input"
+        enc_out = encode(params, enc_embeds, cfg)
+
+    def period_fn(carry, block_params):
+        h, aux = carry
+        h = _constrain_act(h)
+        caches = []
+        for j, kind in enumerate(kinds):
+            h, a, ce = _apply_layer(h, block_params[j], kind, j, cfg,
+                                    positions, enc_out, collect_cache)
+            aux = aux + a
+            caches.append(ce)
+        return (_constrain_act(h), aux), tuple(caches) if collect_cache else None
+
+    fn = jax.checkpoint(period_fn, prevent_cse=False) if remat else period_fn
+    (h, aux), caches = lax.scan(fn, (h, jnp.zeros((), jnp.float32)),
+                                params["blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        out = h
+    else:
+        out = h @ (params["embed"].T if cfg.tie_embeddings
+                   else params["head"])
+    if collect_cache:
+        cache = {"layers": caches, "index": jnp.array(S, jnp.int32)}
+        if enc_out is not None:
+            cache["enc_out"] = enc_out
+        return out, aux, cache
+    return out, aux
+
+
+def lm_loss_chunked(params: PyTree, tokens, cfg: ArchConfig, *,
+                    enc_embeds=None, mask=None, remat: bool = True,
+                    chunk: int = 2048):
+    """Next-token loss with the vocab projection + xent computed in sequence
+    chunks (lax.scan) so the (B, S, V) logits never fully materialize —
+    required for the 100k-200k-vocab architectures at 4k-32k sequ: the full
+    fp32 logits would dominate HBM.  Returns (loss, metrics)."""
+    from repro.models.layers import softmax_xent, accuracy  # local import
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    if mask is not None:
+        mask = mask[:, 1:]
+    h, aux = forward(params, inputs, cfg, enc_embeds=enc_embeds,
+                     remat=remat, return_hidden=True)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    B, S, d = h.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    nchunks = h.shape[1] // C
+    hs = h.reshape(B, nchunks, C, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nchunks, C).transpose(1, 0, 2)
+    ms = mask.reshape(B, nchunks, C).transpose(1, 0, 2)
+
+    def chunk_fn(carry, inp):
+        nll_sum, hit_sum, cnt = carry
+        hc, lc, mc = inp
+        logits = hc @ head
+        logits32 = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits32, axis=-1)
+        gold = jnp.take_along_axis(logits32, lc[..., None], axis=-1)[..., 0]
+        m = mc.astype(jnp.float32)
+        nll_sum = nll_sum + jnp.sum((logz - gold) * m)
+        hit_sum = hit_sum + jnp.sum(
+            (jnp.argmax(logits32, axis=-1) == lc).astype(jnp.float32) * m)
+        return (nll_sum, hit_sum, cnt + jnp.sum(m)), None
+
+    body = jax.checkpoint(chunk_fn, prevent_cse=False) if remat else chunk_fn
+    (nll, hit, cnt), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (hs, ls, ms))
+    cnt = jnp.maximum(cnt, 1.0)
+    xent = nll / cnt
+    return xent + aux, {"xent": xent, "aux": aux, "acc": hit / cnt}
+
+
+def pad_cache(cache: PyTree, cfg: ArchConfig, cache_len: int) -> PyTree:
+    """Grow a prefill-produced cache's KV sequence axis to ``cache_len`` so
+    decode steps can append.  Mamba (constant state) and cross-attn (constant
+    encoder length) entries pass through untouched."""
+    prd = period_of(cfg)
+    kinds = cfg.layer_kinds()[:prd]
+
+    def pad_seq(x):  # (n_periods, B, S, ...) -> (n_periods, B, cache_len, ...)
+        S = x.shape[2]
+        if S >= cache_len:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[2] = (0, cache_len - S)
+        return jnp.pad(x, pad)
+
+    layers = []
+    for kind, ce in zip(kinds, cache["layers"]):
+        if kind == MAMBA or kind == CROSS:
+            layers.append(ce)
+        else:
+            layers.append(jax.tree.map(pad_seq, ce))
+    out = dict(cache)
+    out["layers"] = tuple(layers)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against per-layer caches)
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None,
+               window: int = 0) -> PyTree:
+    """Zero-initialized decode cache.  ``cache_len`` is the KV cache length
+    for attention layers (== window when a sliding-window variant is used).
+    Mamba layers carry constant-size state; cross layers carry the encoder
+    KV (constant length enc_len)."""
+    dtype = _dtype(cfg, dtype)
+    prd = period_of(cfg)
+    n_periods = cfg.num_layers // prd
+    kinds = cfg.layer_kinds()[:prd]
+    hd = cfg.resolved_head_dim
+    S = window if window > 0 else cache_len
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), tree)
+
+    layers = []
+    for kind in kinds:
+        if kind == MAMBA:
+            ce = ssm_lib.mamba_make_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        elif cfg.mla is not None and kind == ATTN:
+            ce = {"ckv": jnp.zeros((batch, S, cfg.mla.kv_lora_rank), dtype),
+                  "krope": jnp.zeros((batch, S, cfg.mla.rope_head_dim), dtype)}
+        elif kind == CROSS:
+            L = cfg.encoder.enc_len
+            ce = {"k": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+                  "v": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype)}
+        else:
+            ce = {"k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+                  "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype)}
+        layers.append(stack(ce))
+    return {"layers": tuple(layers), "index": jnp.zeros((), jnp.int32)}
+
+
+def _decode_layer(h, lp, ce, kind: str, cfg: ArchConfig, index, window: int):
+    """h: (B, d).  Returns (h, new_cache_entry)."""
+    from repro.models.layers import apply_rope
+    B, d = h.shape
+    hd = cfg.resolved_head_dim
+    x = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+    if kind == MAMBA:
+        y, ce = ssm_lib.mamba_block_decode(x, lp["mamba"], cfg.ssm, ce)
+    elif cfg.mla is not None and kind == ATTN:
+        y, ckv, krope = attn_lib.mla_decode_absorbed(
+            x, lp["attn"], ce["ckv"], ce["krope"], index,
+            num_heads=cfg.num_heads, head_dim=hd,
+            rope_head_dim=cfg.mla.rope_head_dim, rope_theta=cfg.rope_theta)
+        ce = {"ckv": ckv, "krope": krope}
+    elif kind == CROSS:
+        q = (x @ lp["attn"]["wq"]).reshape(B, cfg.num_heads, hd)
+        a = attn_lib.decode_attention(q, ce["k"], ce["v"],
+                                      jnp.asarray(ce["k"].shape[1] - 1))
+        y = a.reshape(B, -1) @ lp["attn"]["wo"]
+    else:
+        pos = jnp.full((B, 1), index, jnp.int32)
+        q = (x @ lp["attn"]["wq"]).reshape(B, 1, cfg.num_heads, hd)
+        k = (x @ lp["attn"]["wk"]).reshape(B, 1, cfg.num_kv_heads, hd)
+        v = (x @ lp["attn"]["wv"]).reshape(B, cfg.num_kv_heads, hd)
+        q = apply_rope(q, pos, cfg.rope_theta)[:, 0]
+        k = apply_rope(k, pos, cfg.rope_theta)[:, 0]
+        S = ce["k"].shape[1]
+        slot = (index % S) if window > 0 else index
+        k_cache = lax.dynamic_update_slice_in_dim(
+            ce["k"], k[:, None].astype(ce["k"].dtype), slot, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            ce["v"], v[:, None].astype(ce["v"].dtype), slot, axis=1)
+        a = attn_lib.decode_attention(q, k_cache, v_cache, index,
+                                      window=window)
+        y = a.reshape(B, -1) @ lp["attn"]["wo"]
+        ce = {"k": k_cache, "v": v_cache}
+    h = h + y
+    if "mlp" in lp:
+        x2 = rmsnorm(h, lp["norm2"], cfg.norm_eps)
+        j = None  # MoE-ness is baked in via param structure
+        if "router" in lp["mlp"]:
+            y2, _ = moe_ffn(x2[:, None, :], lp["mlp"], cfg.moe)
+            y2 = y2[:, 0]
+        else:
+            y2 = swiglu(x2, lp["mlp"])
+        h = h + y2
+    return h, ce
+
+
+def decode_step(params: PyTree, tokens, cache: PyTree, cfg: ArchConfig, *,
+                window: int = 0):
+    """tokens: (B,) or (B,1) int32 — ONE new token per sequence.
+    Returns (logits (B, V), new_cache)."""
+    tokens = tokens.reshape(tokens.shape[0])
+    prd = period_of(cfg)
+    kinds = cfg.layer_kinds()[:prd]
+    index = cache["index"]
+    h = params["embed"][tokens]
+    if cfg.rope_theta <= 0:
+        # absolute sinusoidal position of the current token
+        d = cfg.d_model
+        pos = jnp.asarray(index, jnp.float32)
+        div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                      * (-math.log(10000.0) / d))
+        pe = jnp.zeros((d,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(pos * div)).at[1::2].set(jnp.cos(pos * div))
+        h = h + pe.astype(h.dtype)[None]
+
+    def period_fn(h, xs):
+        block_params, ces = xs
+        new_ces = []
+        for j, kind in enumerate(kinds):
+            h, ce = _decode_layer(h, block_params[j], ces[j], kind, cfg,
+                                  index, window)
+            new_ces.append(ce)
+        return h, tuple(new_ces)
+
+    h, new_layer_caches = lax.scan(period_fn, h,
+                                   (params["blocks"], cache["layers"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ (params["embed"].T if cfg.tie_embeddings else params["head"])
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layer_caches
+    new_cache["index"] = index + 1
+    return logits, new_cache

@@ -1,0 +1,6 @@
+from repro.optim.schedules import (constant, cosine, linear_scaling_lr,
+                                   wsd_schedule)
+from repro.optim.optimizers import adam_init, adam_step, sgd_step
+
+__all__ = ["constant", "cosine", "wsd_schedule", "linear_scaling_lr",
+           "adam_init", "adam_step", "sgd_step"]

@@ -1,0 +1,36 @@
+"""Plain (non-federated) optimizers — used by the centralized baseline and
+the serving-side fine-tune example."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def sgd_step(params: PyTree, grads: PyTree, lr) -> PyTree:
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) -
+                      lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+
+
+def adam_init(params: PyTree) -> PyTree:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params: PyTree, grads: PyTree, state: PyTree, lr, *,
+              b1=0.9, b2=0.999, eps=1e-8) -> Tuple[PyTree, PyTree]:
+    t = state["t"] + 1
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], g32)
+    tf = t.astype(jnp.float32)
+    new = jax.tree.map(
+        lambda p, mi, vi: (p.astype(jnp.float32) - lr * (mi / (1 - b1 ** tf)) /
+                           (jnp.sqrt(vi / (1 - b2 ** tf)) + eps)).astype(p.dtype),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}

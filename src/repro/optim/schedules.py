@@ -1,0 +1,42 @@
+"""LR schedules.  Includes WSD (warmup-stable-decay) used by MiniCPM
+[arXiv:2404.06395] and the linear-scaling rule [Goyal et al., 2017] the
+paper applies for different local batch sizes B (§4.2.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return f
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup_frac: float = 0.01,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long flat stage, sharp decay
+    tail — MiniCPM's schedule."""
+    warm = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / warm, 1.0)
+        d = jnp.clip((step - decay_start) /
+                     jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        return lr * w * (1.0 - (1.0 - final_frac) * d)
+    return f
+
+
+def linear_scaling_lr(base_lr: float, batch: int, base_batch: int = 64) -> float:
+    """lr ~ B (Goyal et al., 2017), as the paper uses for different B."""
+    return base_lr * batch / base_batch

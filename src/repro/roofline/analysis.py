@@ -1,0 +1,142 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+The SPMD-partitioned HLO module is a *per-device* program, so
+``compiled.cost_analysis()`` FLOPs/bytes and the collective operand sizes
+parsed from ``compiled.as_text()`` are per-chip quantities:
+
+    compute term    = flops_per_chip / peak_flops_chip
+    memory term     = bytes_per_chip / hbm_bw_chip
+    collective term = collective_bytes_per_chip / link_bw
+
+(equivalent to the global formulation HLO_FLOPs / (chips * peak) since
+global = per_chip * chips for an SPMD program).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (values fixed by the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of every dtype[dims] occurrence in a shape string
+    (handles tuple results)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind from (post-SPMD)
+    optimized HLO text.  Result-shape bytes approximate the per-device
+    payload that crosses links (all-gather result = full gathered tensor;
+    all-reduce payload ~ 2x(n-1)/n of the tensor — we record raw result
+    bytes and keep the convention consistent across iterations)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        # normalize fused variants like all-gather-start / all-reduce-done
+        base = None
+        for k in COLLECTIVE_OPS:
+            if op == k or op.startswith(k + "-"):
+                base = k
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # the -start op already carries the shape
+        out[base] += shape_bytes(shape_str)
+        counts[base] += 1
+    out = {k: v for k, v in out.items() if v}
+    out["_counts"] = {k: v for k, v in counts.items() if v}
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    flops_ratio: Optional[float] = None   # MODEL_FLOPS / (HLO_FLOPs*chips)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float,
+                   model_flops_global: Optional[float] = None,
+                   chips: int = 256) -> Roofline:
+    c = flops_per_chip / PEAK_FLOPS
+    m = bytes_per_chip / HBM_BW
+    n = coll_bytes_per_chip / LINK_BW
+    terms = {"compute": c, "memory": m, "collective": n}
+    bottleneck = max(terms, key=terms.get)
+    ratio = None
+    if model_flops_global is not None and flops_per_chip > 0:
+        ratio = model_flops_global / (flops_per_chip * chips)
+    return Roofline(compute_s=c, memory_s=m, collective_s=n,
+                    flops_per_chip=flops_per_chip,
+                    bytes_per_chip=bytes_per_chip,
+                    coll_bytes_per_chip=coll_bytes_per_chip,
+                    bottleneck=bottleneck,
+                    model_flops=model_flops_global, flops_ratio=ratio)
+
+
+def model_flops_per_round(arch, shape, fed=None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per token-processing
+    pass; D = tokens processed.  For the federated train step the tokens are
+    processed (local_steps-1) keep-trace fwd+bwd passes + 1 evaluation
+    fwd+bwd + (second-order correction ~ another fwd+bwd over the trajectory)
+    — we count the *algorithmic* 6*N*D per optimization pass, with
+    pass-count = local_steps for UGA and local_steps for FedAvg, + 1 meta
+    pass; the dry-run compute term exposes the rest (remat, second order) as
+    compiled/useful ratio."""
+    n_active = arch.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        passes = (fed.local_steps if fed is not None else 2)
+        meta = 1 if (fed is None or fed.meta) else 0
+        # + meta batch tokens (64 sequences)
+        meta_tokens = 64 * shape.seq_len * meta
+        return 6.0 * n_active * (tokens * passes + meta_tokens)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

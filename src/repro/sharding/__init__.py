@@ -1,0 +1,8 @@
+from repro.sharding.specs import (batch_axes, cache_shardings,
+                                  cohort_batch_shardings, fsdp_axes,
+                                  param_shardings, param_spec, replicated,
+                                  simple_batch_shardings, state_shardings)
+
+__all__ = ["param_spec", "param_shardings", "state_shardings",
+           "cohort_batch_shardings", "simple_batch_shardings",
+           "cache_shardings", "replicated", "fsdp_axes", "batch_axes"]

@@ -1,0 +1,245 @@
+"""PartitionSpec rules for parameters, server state, batches and caches.
+
+Sharding strategy (DESIGN.md §7):
+  * params: 2D "FSDP x TP" — the input/embedding dim shards over the FSDP
+    axes (``data``, plus ``pod`` for the client-sequential strategy in the
+    multi-pod mesh), the output/head/expert dim over ``model`` (TP);
+  * cohort/batch axes shard over (``pod``, ``data``);
+  * decode KV caches shard batch over ``data`` and the cache sequence over
+    ``model`` (GSPMD turns softmax over the sharded axis into a collective
+    — flash-decode-by-compiler); the 500k B=1 cache shards sequence over
+    ``data`` as well.
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size (e.g. whisper's 51866 vocab) — recorded by ``explain()`` for the
+roofline notes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """Use `axes` for a dim only if it divides evenly, else replicate."""
+    return axes if axes and dim % axis_size(mesh, axes) == 0 else None
+
+
+def fsdp_axes(mesh: Mesh, strategy: str):
+    """FSDP axes for the parameter input-dim: the pod axis joins FSDP under
+    the client-sequential (scan) strategy; under client-parallel (vmap) the
+    pods are pure data-parallel replicas."""
+    if "pod" in mesh.axis_names and strategy == "scan":
+        return ("pod", "data")
+    return ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+_IN_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_dkv", "w_kr",
+           "router", "proj", "w_in", "wx", "wh", "out_w"}       # (d_in, d_out)
+_OUT_IN = {"wo", "w_down", "out_proj", "w_out"}                 # (d_out, d_in)
+_REPL = {"dt_bias", "A_log", "D", "b", "b_in", "b_out", "out_b",
+         "ln1_s", "ln1_b", "ln2_s", "ln2_b", "ln_f_s", "ln_f_b"}
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               strategy: str = "vmap") -> P:
+    """Spec for one parameter leaf.  ``path`` is '/'-joined key names."""
+    fs = fsdp_axes(mesh, strategy)
+    parts = path.split("/")
+    name = parts[-1]
+    # stacked leading axes: blocks/<i>/... (n_periods) and encoder/layers/...
+    n_stack = 0
+    if "blocks" in parts or ("layers" in parts and "encoder" in parts):
+        n_stack = 1
+    core = shape[n_stack:]
+    lead = (None,) * n_stack
+
+    def spec(*axes):
+        return P(*(lead + axes))
+
+    if name in _REPL or len(core) <= 1:
+        if name == "embed" and len(core) == 2:
+            pass  # fall through
+        else:
+            return P(*((None,) * len(shape)))
+    if name == "embed":
+        return spec(_maybe(mesh, "model", core[0]), _maybe(mesh, fs, core[1]))
+    if name == "head":
+        return spec(_maybe(mesh, fs, core[0]), _maybe(mesh, "model", core[1]))
+    if name == "conv_w":
+        return spec(None, _maybe(mesh, "model", core[1]))
+    if name in ("w_uk", "w_uv"):  # (r, H, hd)
+        return spec(_maybe(mesh, fs, core[0]),
+                    _maybe(mesh, "model", core[1]), None)
+    if len(core) == 3:            # MoE experts (E, a, b)
+        e = _maybe(mesh, "model", core[0])
+        if name in _OUT_IN:       # (E, de, d)
+            return spec(e, None, _maybe(mesh, fs, core[2]))
+        return spec(e, _maybe(mesh, fs, core[1]), None)
+    if name in _OUT_IN:
+        return spec(_maybe(mesh, "model", core[0]), _maybe(mesh, fs, core[1]))
+    if name in _IN_OUT:
+        return spec(_maybe(mesh, fs, core[0]), _maybe(mesh, "model", core[1]))
+    # fallback: shard the largest divisible dim over model, next over fsdp
+    axes: list = [None] * len(core)
+    order = sorted(range(len(core)), key=lambda i: -core[i])
+    if order and _maybe(mesh, "model", core[order[0]]):
+        axes[order[0]] = "model"
+    if len(order) > 1 and _maybe(mesh, fs, core[order[1]]):
+        axes[order[1]] = fs
+    return spec(*axes)
+
+
+def tree_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    return flat, treedef, paths
+
+
+def param_shardings(params_shape: PyTree, mesh: Mesh,
+                    strategy: str = "vmap") -> PyTree:
+    """NamedShardings for a params(-like) pytree of ShapeDtypeStructs.
+    Also used for optimizer state (leaf paths mirror param paths)."""
+    flat, treedef, paths = tree_paths(params_shape)
+    out = []
+    for (path, leaf), pstr in zip(flat, paths):
+        spec = param_spec(pstr, tuple(leaf.shape), mesh, strategy)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cohort_grad_shardings(params_shape: PyTree, mesh: Mesh,
+                          strategy: str = "vmap") -> PyTree:
+    """Specs for the stacked per-client gradients (cohort, *param_dims):
+    cohort over (pod, data), remaining dims per ``param_spec``."""
+    ba = batch_axes(mesh)
+    flat, treedef, paths = tree_paths(params_shape)
+    out = []
+    for (path, leaf), pstr in zip(flat, paths):
+        spec = param_spec(pstr, tuple(leaf.shape), mesh, strategy)
+        # drop any use of the batch axes inside the param spec (the cohort
+        # axis owns them), then prepend the cohort axis
+        def strip(e):
+            if e is None:
+                return None
+            es = (e,) if isinstance(e, str) else tuple(e)
+            es = tuple(a for a in es if a not in ba)
+            return es if es else None
+        inner = tuple(strip(e) for e in spec)
+        out.append(NamedSharding(mesh, P(ba, *inner)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(state_shape: PyTree, mesh: Mesh,
+                    strategy: str = "vmap") -> PyTree:
+    """Server state {params, opt, round}: opt moments mirror param specs."""
+    flat, treedef, paths = tree_paths(state_shape)
+    out = []
+    for (path, leaf), pstr in zip(flat, paths):
+        if pstr == "round" or pstr.endswith("/t") or leaf.ndim == 0:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        core = re.sub(r"^(params|opt/m|opt/v)/", "", pstr)
+        spec = param_spec(core, tuple(leaf.shape), mesh, strategy)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def cohort_batch_shardings(batch_shape: PyTree, mesh: Mesh,
+                           strategy: str = "vmap") -> PyTree:
+    """cohort_batch leaves (cohort, b, ...).
+
+    vmap: cohort shards over (pod, data) and the per-client example axis b
+    over model — every chip holds a (1-client, b/16-example) activation
+    slice, so per-period activation residuals shard 256-way; scan: cohort is
+    the sequential axis — b shards over (data, model)."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if strategy == "vmap":
+            spec = (_maybe(mesh, ba, leaf.shape[0]),
+                    _maybe(mesh, "model", leaf.shape[1])) + \
+                   (None,) * (leaf.ndim - 2)
+        else:
+            b_ax = _maybe(mesh, ("data", "model"), leaf.shape[1]) or \
+                _maybe(mesh, "data", leaf.shape[1])
+            spec = (None, b_ax) + (None,) * (leaf.ndim - 2)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def simple_batch_shardings(batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    """Batches with a leading example axis (meta batch, prefill batch)."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        spec = (_maybe(mesh, ba, leaf.shape[0]),) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: PyTree, mesh: Mesh, *,
+                    seq_axes_for_b1=("data",)) -> PyTree:
+    """Decode cache: leaves are either
+      (n_periods, B, S, ...)   KV-like   -> B over (pod,data), S over model
+      (n_periods, B, H, N, P)  SSM state -> B over (pod,data), H over model
+      (n_periods, B, k, C)     conv      -> B over (pod,data), C over model
+    When B == 1 (long_500k) the batch axis cannot shard: the KV sequence
+    axis takes the FSDP axes instead."""
+    ba = batch_axes(mesh)
+
+    def one(path_str, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        shape = leaf.shape
+        B = shape[1]
+        b_ax = _maybe(mesh, ba, B)
+        if "ssm" in path_str:                       # (np, B, H, N, P)
+            return NamedSharding(mesh, P(
+                None, b_ax, _maybe(mesh, "model", shape[2]), None, None))
+        if "conv" in path_str:                      # (np, B, k, C)
+            return NamedSharding(mesh, P(
+                None, b_ax, None, _maybe(mesh, "model", shape[3])))
+        # KV-like: (np, B, S, ...) — ckv/krope are (np, B, S, r)
+        if B == 1:
+            s_ax = _maybe(mesh, seq_axes_for_b1, shape[2])
+            rest = [None] * (leaf.ndim - 3)
+            return NamedSharding(mesh, P(None, None, s_ax, *rest))
+        s_ax = _maybe(mesh, "model", shape[2])
+        rest = [None] * (leaf.ndim - 3)
+        return NamedSharding(mesh, P(None, b_ax, s_ax, *rest))
+
+    flat, treedef, paths = tree_paths(cache_shape)
+    out = [one(p, leaf) for (path, leaf), p in zip(flat, paths)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# CPU test determinism; dry-run device-count flags are NOT set here on
+# purpose (smoke tests must see the real 1-device environment).
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

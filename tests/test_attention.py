@@ -1,0 +1,114 @@
+"""Attention variants: flash custom-vjp vs direct softmax oracle, chunked
+scan, decode paths, sequence-sharded decode partials."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (chunked_attention, combine_partials,
+                                    decode_attention, flash_attention,
+                                    flash_decode_partial, simple_attention)
+
+
+def _qkv(key, B, Sq, Skv, H, Hkv, D, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, Sq, H, D), dtype),
+            jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype),
+            jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (6, 2), (4, 1)])
+def test_flash_matches_oracle(key, causal, window, H, Hkv):
+    q, k, v = _qkv(key, 2, 128, 128, H, Hkv, 32)
+    out = flash_attention(q, k, v, causal, window, 64, 64)
+    ref = simple_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32)])
+def test_flash_gradients_match_oracle(key, causal, window):
+    q, k, v = _qkv(key, 1, 128, 128, 4, 2, 16)
+    do = jax.random.normal(key, q.shape[:3] + (16,))
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * do)
+
+    g1 = jax.grad(loss(lambda q, k, v: flash_attention(
+        q, k, v, causal, window, 32, 32)), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(lambda q, k, v: simple_attention(
+        q, k, v, causal=causal, window=window)), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-3)
+
+
+def test_flash_second_order_finite(key):
+    q, k, v = _qkv(key, 1, 64, 64, 2, 2, 16)
+
+    def inner(q):
+        return jnp.sum(flash_attention(q, k, v, True, 0, 32, 32) ** 2)
+
+    h = jax.grad(lambda q: jnp.sum(jax.grad(inner)(q) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_chunked_matches_oracle_nondivisible(key):
+    q, k, v = _qkv(key, 2, 100, 100, 4, 2, 16)
+    out = chunked_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    ref = simple_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_kv_len_mask(key):
+    q, k, v = _qkv(key, 2, 16, 32, 2, 2, 8)
+    kv_len = jnp.array([20, 32], jnp.int32)
+    out = chunked_attention(q, k, v, causal=False, kv_len=kv_len,
+                            q_block=8, kv_block=8)
+    ref0 = simple_attention(q[:1], k[:1, :20], v[:1, :20], causal=False)
+    np.testing.assert_allclose(out[0], ref0[0], atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_full(key):
+    B, S, H, Hkv, D = 2, 32, 4, 2, 16
+    q1, k, v = _qkv(key, B, 1, S, H, Hkv, D)
+    index = 20  # 21 valid cache entries
+    out = decode_attention(q1[:, 0], k, v, jnp.asarray(index))
+    ref = simple_attention(q1, k[:, :index + 1], v[:, :index + 1],
+                           causal=False)
+    np.testing.assert_allclose(out, ref[:, 0], atol=2e-5, rtol=1e-4)
+
+
+def test_flash_decode_partials_combine(key):
+    """Sequence-sharded decode: partials over 4 shards == full attention."""
+    B, S, H, D, shards = 2, 64, 4, 16, 4
+    q1, k, v = _qkv(key, B, 1, S, H, H, D)
+    q = q1[:, 0]
+    index = jnp.asarray(S - 1)
+    loc = S // shards
+    ms, ls, os = [], [], []
+    for i in range(shards):
+        m, l, o = flash_decode_partial(q, k[:, i * loc:(i + 1) * loc],
+                                       v[:, i * loc:(i + 1) * loc],
+                                       index, i * loc)
+        ms.append(m), ls.append(l), os.append(o)
+    # emulate pmax/psum combine across the shard axis
+    m = jnp.stack(ms)                                # (shards, B, H)
+    m_g = jnp.max(m, 0)
+    corr = jnp.exp(m - m_g[None])
+    l_g = jnp.sum(jnp.stack(ls) * corr, 0)
+    o_g = jnp.sum(jnp.stack(os) * corr[..., None], 0)
+    out = o_g / l_g[..., None]
+    ref = decode_attention(q, k, v, index)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_ring_buffer_window_validity(key):
+    """decode_attention with window: before wraparound only written slots
+    are attended."""
+    B, W, H, D = 1, 8, 2, 8
+    q1, k, v = _qkv(key, B, 1, W, H, H, D)
+    q = q1[:, 0]
+    # only 3 tokens written (index=2): slots 3..7 must be masked
+    out = decode_attention(q, k, v, jnp.asarray(2), window=W)
+    ref = simple_attention(q1, k[:, :3], v[:, :3], causal=False)
+    np.testing.assert_allclose(out, ref[:, 0], atol=2e-5, rtol=1e-4)

@@ -1,0 +1,111 @@
+"""Data pipeline (partitioners, meta-set overlap control, cohort sampling)
+and optimizer/schedule units."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (make_meta_set, partition_by_writer,
+                                  partition_dirichlet, partition_iid)
+from repro.data.pipeline import FederatedData
+from repro.data.synthetic import (synthetic_chars, synthetic_images,
+                                  synthetic_tokens)
+from repro.optim import (cosine, linear_scaling_lr, wsd_schedule)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), clients=st.integers(2, 12))
+def test_partition_iid_disjoint_complete(seed, clients):
+    rng = np.random.default_rng(seed)
+    parts = partition_iid(rng, 100, clients)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 100 and len(np.unique(allidx)) == 100
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50), alpha=st.sampled_from([0.1, 0.5, 5.0]))
+def test_partition_dirichlet_valid(seed, alpha):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, 400)
+    parts = partition_dirichlet(rng, labels, 8, alpha=alpha, min_per_client=4)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx) == 400
+    assert min(len(p) for p in parts) >= 4
+
+
+def test_partition_dirichlet_skew_increases_as_alpha_drops():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 5, 2000)
+
+    def skew(alpha):
+        parts = partition_dirichlet(np.random.default_rng(1), labels, 8,
+                                    alpha=alpha)
+        # mean per-client entropy of label distribution (lower = more skew)
+        ents = []
+        for p in parts:
+            c = np.bincount(labels[p], minlength=5) + 1e-9
+            q = c / c.sum()
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert skew(0.1) < skew(10.0)
+
+
+def test_by_writer_partition():
+    w = np.array([0, 1, 0, 2, 1, 0])
+    parts = partition_by_writer(w, [0, 1, 2])
+    assert [len(p) for p in parts] == [3, 2, 1]
+
+
+@pytest.mark.parametrize("overlap", [0.0, 0.25, 0.5, 1.0])
+def test_meta_set_overlap_control(overlap):
+    rng = np.random.default_rng(0)
+    writers = np.repeat(np.arange(40), 25)           # 1000 examples
+    train_w = list(range(20))
+    aux_w = list(range(20, 40))
+    meta = make_meta_set(rng, writers, train_w, aux_w, overlap=overlap,
+                         fraction=0.05)
+    meta_writers = set(writers[meta].tolist())
+    frac_in_train = np.mean([w in set(train_w) for w in meta_writers])
+    assert abs(frac_in_train - overlap) < 0.3
+
+
+def test_cohort_sampling_shapes_and_weights():
+    rng = np.random.default_rng(0)
+    n = 200
+    data = FederatedData(
+        arrays={"x": rng.normal(size=(n, 3)).astype(np.float32)},
+        client_indices=partition_iid(rng, n, 10),
+        shared_indices=np.arange(16), seed=0)
+    s = data.sample_round(3, cohort=4, batch=8)
+    assert s["cohort_batch"]["x"].shape == (4, 8, 3)
+    assert s["client_weights"].shape == (4,)
+    assert len(set(s["clients"].tolist())) == 4
+    # deterministic per round
+    s2 = data.sample_round(3, cohort=4, batch=8)
+    np.testing.assert_array_equal(s["cohort_batch"]["x"],
+                                  s2["cohort_batch"]["x"])
+
+
+def test_synthetic_generators_shapes():
+    rng = np.random.default_rng(0)
+    img = synthetic_images(rng, n=50, image_size=8, channels=3,
+                           num_classes=4, num_writers=5)
+    assert img.x.shape == (50, 8, 8, 3) and img.y.max() < 4
+    ch = synthetic_chars(rng, n=20, seq_len=16, vocab=30, num_roles=5)
+    assert ch.tokens.shape == (20, 16) and ch.tokens.max() < 30
+    tk = synthetic_tokens(rng, n=20, seq_len=16, vocab=100, num_clients=4)
+    assert tk.tokens.shape == (20, 16)
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1.0, 1000, warmup_frac=0.01, decay_frac=0.1)
+    assert float(f(0)) < 0.2
+    assert abs(float(f(500)) - 1.0) < 1e-6           # stable plateau
+    assert float(f(999)) < 0.2                       # decay tail
+    g = cosine(1.0, 100, warmup=10)
+    assert float(g(5)) < 1.0 and abs(float(g(10)) - 1.0) < 1e-5
+
+
+def test_linear_scaling_rule():
+    assert linear_scaling_lr(0.002, 128, 64) == pytest.approx(0.004)

@@ -1,0 +1,78 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps against the
+pure-jnp oracles, per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention as fa_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.models.ssm import ssd_chunked
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (2, 128, 4, 2, 64),
+    (1, 256, 8, 8, 128),
+    (2, 128, 4, 1, 64),
+    (1, 192, 2, 2, 96),        # padding path (192 % 128 != 0)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64)])
+def test_flash_kernel_sweep(key, B, S, H, Hkv, D, dtype, causal, window):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = fa_kernel(q, k, v, causal=causal, window=window, bq=128, bk=128,
+                    interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    ref = attention_ref(qf, kf, vf, causal=causal, window=window)
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 4, 64, 32, 32),
+    (1, 256, 2, 128, 64, 64),
+    (2, 64, 8, 64, 16, 16),
+    (2, 128, 4, 64, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(key, B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, H, N), dtype)
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    a = dt * A[None, None, :]
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, t.shape[-1])
+    yref = ssd_ref(fold(x), fold(dt[..., None]), fold(a[..., None]),
+                   fold(Bm), fold(Cm)).reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    tol = dict(atol=6e-2, rtol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=5e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32), **tol)
+
+
+def test_ssd_kernel_matches_model_chunked(key):
+    """Kernel == the model's jnp chunked implementation (the XLA path the
+    dry-run uses) — bitwise-close since both use the chunked algorithm."""
+    B, S, H, P, N, chunk = 2, 128, 4, 64, 32, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+    y_kernel = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_model, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               atol=1e-5, rtol=1e-5)

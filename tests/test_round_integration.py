@@ -1,0 +1,148 @@
+"""Federated-round integration: end-to-end convergence, algorithm ordering
+on a synthetic non-IID problem, FedShare injection, checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs.base import FedConfig
+from repro.core import init_server_state, make_federated_round
+from repro.data.pipeline import FederatedData
+from repro.data.partition import partition_dirichlet
+from repro.models.model import Model
+
+
+def make_mlp_model(d=10, h=16, classes=4):
+    def init(k):
+        k1, k2 = jax.random.split(k)
+        return {"w1": jax.random.normal(k1, (d, h)) * 0.3,
+                "w2": jax.random.normal(k2, (h, classes)) * 0.3}
+
+    def loss(w, batch, rng=None):
+        logits = jnp.tanh(batch["x"] @ w["w1"]) @ w["w2"]
+        l = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["y"][:, None], 1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(
+            jnp.float32))
+        return l, {"acc": acc}
+
+    return Model(name="mlp", init=init, loss=loss)
+
+
+def _noniid_problem(seed=0, n=512, d=10, classes=4, clients=16):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (classes, d))
+    y = rng.integers(0, classes, n)
+    x = protos[y] + 0.6 * rng.normal(0, 1, (n, d))
+    parts = partition_dirichlet(rng, y, clients, alpha=0.3)
+    meta = rng.choice(n, 32, replace=False)
+    return FederatedData(
+        arrays={"x": x.astype(np.float32), "y": y.astype(np.int32)},
+        client_indices=parts, meta_indices=meta,
+        shared_indices=rng.choice(n, 32, replace=False), seed=seed)
+
+
+def _train(algorithm, meta, rounds=40, share=False, seed=0):
+    model = make_mlp_model()
+    data = _noniid_problem(seed)
+    # UGA takes ONE server gradient step per round vs FedAvg's local_steps
+    # biased ones — eta_g = local_steps * eta equalizes the per-round step
+    # budget at this tiny round count (the paper fixes eta_g=eta over 500+
+    # rounds; see benchmarks/common.py)
+    fed = FedConfig(algorithm=algorithm, meta=meta, share=share, cohort=4,
+                    local_steps=4, client_lr=0.1, server_lr=0.4, meta_lr=0.1)
+    rf = jax.jit(make_federated_round(model, fed))
+    key = jax.random.PRNGKey(seed)
+    state = init_server_state(model, fed, key)
+    for r in range(rounds):
+        s = data.sample_round(r, cohort=4, batch=16, share=share)
+        meta_b = data.sample_meta(r, 16)
+        state, m = rf(state, jax.tree.map(jnp.asarray, s["cohort_batch"]),
+                      jax.tree.map(jnp.asarray, meta_b),
+                      jnp.asarray(s["client_weights"]),
+                      jax.random.fold_in(key, r))
+    # full-data eval
+    full = {"x": jnp.asarray(data.arrays["x"]),
+            "y": jnp.asarray(data.arrays["y"])}
+    return float(model.loss(state["params"], full)[0]), state
+
+
+def test_uga_meta_converges_and_beats_fedavg():
+    l_uga, _ = _train("uga", meta=True)
+    l_avg, _ = _train("fedavg", meta=False)
+    l_init = 1.6  # ~ln(4) + slack
+    assert l_uga < l_init * 0.7, l_uga          # converges
+    assert l_avg < l_init * 0.9, l_avg          # baseline converges too
+    # at comparable per-round step budgets UGA+meta is at least in the same
+    # ballpark (the ordering claims are benchmarked, not unit-tested)
+    assert l_uga < l_avg * 1.5, (l_uga, l_avg)
+
+
+def test_fedprox_runs_and_converges():
+    l, _ = _train("fedprox", meta=False)
+    assert l < 1.3
+
+
+def test_fedshare_injection_changes_batches():
+    data = _noniid_problem()
+    a = data.sample_round(0, cohort=4, batch=16, share=False)
+    b = data.sample_round(0, cohort=4, batch=16, share=True,
+                          share_fraction=0.5)
+    assert a["cohort_batch"]["x"].shape == b["cohort_batch"]["x"].shape
+    assert not np.allclose(a["cohort_batch"]["x"], b["cohort_batch"]["x"])
+
+
+def test_lr_decay_applied():
+    # fedavg: the pseudo-gradient scales with the (decayed) client lr.
+    # (UGA's server step uses the non-decayed eta_g by design — Eq. 14.)
+    model = make_mlp_model()
+    fed = FedConfig(algorithm="fedavg", meta=False, cohort=2, local_steps=2,
+                    client_lr=0.1, lr_decay=0.5)
+    rf = jax.jit(make_federated_round(model, fed))
+    key = jax.random.PRNGKey(0)
+    data = _noniid_problem()
+    s0 = init_server_state(model, fed, key)
+    # round index deep in training => tiny effective lr => tiny grad step
+    s_late = dict(s0, round=jnp.asarray(50, jnp.int32))
+    smp = data.sample_round(0, cohort=2, batch=8)
+    args = (jax.tree.map(jnp.asarray, smp["cohort_batch"]),
+            jax.tree.map(jnp.asarray, data.sample_meta(0, 8)),
+            jnp.asarray(smp["client_weights"]), key)
+    s1, _ = rf(s0, *args)
+    s2, _ = rf(s_late, *args)
+    d_early = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(s1["params"]), jax.tree.leaves(s0["params"])))
+    d_late = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(s2["params"]), jax.tree.leaves(s0["params"])))
+    assert d_late < d_early * 0.05
+
+
+@pytest.mark.parametrize("opt", ["sgd", "sgdm", "adam", "yogi"])
+def test_server_optimizers_run(opt):
+    model = make_mlp_model()
+    fed = FedConfig(algorithm="uga", meta=False, cohort=2, local_steps=2,
+                    client_lr=0.05, server_opt=opt, server_momentum=0.9)
+    rf = jax.jit(make_federated_round(model, fed))
+    key = jax.random.PRNGKey(0)
+    data = _noniid_problem()
+    state = init_server_state(model, fed, key)
+    smp = data.sample_round(0, cohort=2, batch=8)
+    state, m = rf(state, jax.tree.map(jnp.asarray, smp["cohort_batch"]),
+                  jax.tree.map(jnp.asarray, data.sample_meta(0, 8)),
+                  jnp.asarray(smp["client_weights"]), key)
+    assert bool(jnp.isfinite(m["client_loss"]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    model = make_mlp_model()
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, params, extra={"round": 7})
+    restored, extra = restore(path, params)
+    assert extra["round"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
