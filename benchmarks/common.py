@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import init_server_state, make_federated_round
+from repro.core import (init_server_state, RoundFnCache,
+                        stack_round_inputs)
 from repro.data.pipeline import FederatedData
 
 # method name -> FedConfig kwargs (the paper's comparison grid)
@@ -35,11 +36,16 @@ METHODS = {
 
 
 def evaluate(model, params, data: FederatedData, idx: np.ndarray,
-             batch: int = 256) -> Dict[str, float]:
+             batch: int = 256, loss_fn=None) -> Dict[str, float]:
+    """``loss_fn``: an already-jitted ``model.loss`` — pass it when calling
+    in a loop so the eval forward pass compiles once instead of retracing
+    op-by-op every round."""
+    if loss_fn is None:
+        loss_fn = model.loss
     accs, losses, ns = [], [], []
     for b in data.eval_batches(idx, batch):
         b = jax.tree.map(jnp.asarray, b)
-        l, m = model.loss(params, b)
+        l, m = loss_fn(params, b)
         n = len(jax.tree.leaves(b)[0])
         losses.append(float(l) * n)
         accs.append(float(m.get("acc", jnp.nan)) * n)
@@ -53,12 +59,18 @@ def train_method(model, data: FederatedData, method: str, *, rounds: int,
                  eval_idx: np.ndarray, eval_every: int = 5, seed: int = 0,
                  lr_decay: float = 0.996, meta_batch: int = 32,
                  prox_mu: float = 2e-4, uga_server_lr: Optional[float] = None,
-                 clip_norm: float = 2.0) -> List[Dict[str, float]]:
+                 clip_norm: float = 2.0, fused: bool = False,
+                 rounds_per_call: int = 1) -> List[Dict[str, float]]:
     """uga_server_lr: eta_g for the UGA variants — defaults to
     local_steps*lr*2 so one unbiased server step has a per-round
     displacement comparable to FedAvg's local_steps biased ones (the paper
     fixes eta_g = eta and runs 500+ rounds; benchmark budgets are smaller).
-    clip_norm tames the HVP amplification the paper notes in §4.5.1."""
+    clip_norm tames the HVP amplification the paper notes in §4.5.1.
+
+    ``rounds_per_call=K`` compiles K rounds into one donated lax.scan
+    program (one dispatch + one host metric sync per K rounds); eval points
+    then land on chunk boundaries instead of every ``eval_every`` exactly.
+    ``fused``: flat-buffer Pallas server step (kernels/fused_update)."""
     kw = METHODS[method]
     if uga_server_lr is None:
         uga_server_lr = 2 * local_steps * lr
@@ -67,25 +79,47 @@ def train_method(model, data: FederatedData, method: str, *, rounds: int,
                     local_steps=local_steps, client_lr=lr,
                     server_lr=uga_server_lr,
                     meta_lr=lr, lr_decay=lr_decay, prox_mu=prox_mu,
-                    clip_norm=clip_norm)
-    rf = jax.jit(make_federated_round(model, fed))
+                    clip_norm=clip_norm, fused_update=fused)
     key = jax.random.PRNGKey(seed)
     state = init_server_state(model, fed, key)
-    history = []
-    for r in range(rounds):
+    loss_jit = jax.jit(model.loss)
+    get_rf = RoundFnCache(model, fed)
+
+    def sample(r):
         s = data.sample_round(r, cohort=cohort, batch=batch,
                               share=kw["share"])
         mb = data.sample_meta(r, meta_batch) if data.meta_indices is not None \
-            else jax.tree.map(lambda x: x[:meta_batch],
-                              s["cohort_batch"])
-        state, m = rf(state, jax.tree.map(jnp.asarray, s["cohort_batch"]),
-                      jax.tree.map(jnp.asarray, mb),
-                      jnp.asarray(s["client_weights"]),
-                      jax.random.fold_in(key, r))
-        if r % eval_every == 0 or r == rounds - 1:
-            ev = evaluate(model, state["params"], data, eval_idx)
-            history.append({"round": r, **ev,
-                            "client_loss": float(m["client_loss"])})
+            else jax.tree.map(lambda x: x[:meta_batch], s["cohort_batch"])
+        return s, mb
+
+    history = []
+    r = 0
+    while r < rounds:
+        k = min(max(rounds_per_call, 1), rounds - r)
+        if k == 1:
+            s, mb = sample(r)
+            state, m = get_rf(1)(
+                state, jax.tree.map(jnp.asarray, s["cohort_batch"]),
+                jax.tree.map(jnp.asarray, mb),
+                jnp.asarray(s["client_weights"]), jax.random.fold_in(key, r))
+            client_loss = float(m["client_loss"])
+        else:
+            pairs = [sample(r + j) for j in range(k)]
+            cb, mbs, wts, rngs = stack_round_inputs(
+                [p[0]["cohort_batch"] for p in pairs],
+                [p[1] for p in pairs],
+                [p[0]["client_weights"] for p in pairs],
+                [jax.random.fold_in(key, r + j) for j in range(k)])
+            state, m = get_rf(k)(state, cb, mbs, wts, rngs)
+            client_loss = float(m["client_loss"][-1])
+        last = r + k - 1
+        if any((r + j) % eval_every == 0 or r + j == rounds - 1
+               for j in range(k)):
+            ev = evaluate(model, state["params"], data, eval_idx,
+                          loss_fn=loss_jit)
+            history.append({"round": last, **ev,
+                            "client_loss": client_loss})
+        r += k
     return history
 
 

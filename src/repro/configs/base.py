@@ -227,6 +227,12 @@ class FedConfig:
     clip_norm: float = 0.0              # >0: clip the aggregated gradient G
                                         # (tames UGA's HVP amplification — the
                                         # instability the paper notes in §4.5.1)
+    fused_update: bool = False          # fused flat-buffer Pallas server step
+                                        # (aggregate->clip->apply in 2 HBM
+                                        # passes; kernels/fused_update).  False
+                                        # keeps the legacy tree-map path.
+                                        # Implies fp32 aggregation (the fused
+                                        # kernels ignore grad_agg_dtype).
 
     def __post_init__(self):
         assert self.algorithm in ("fedavg", "uga", "fedprox"), self.algorithm

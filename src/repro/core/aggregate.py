@@ -39,15 +39,20 @@ def weighted_mean(trees: PyTree, weights: jax.Array, dtype=jnp.float32):
 def cohort_gradient(client_update: Callable, w_t: PyTree, cohort_batch: PyTree,
                     client_weights: jax.Array, lr, rng, *,
                     strategy: str = "vmap", agg_dtype=jnp.float32,
-                    spmd_axis_name=None, grad_shardings=None
-                    ) -> Tuple[PyTree, jax.Array]:
+                    spmd_axis_name=None, grad_shardings=None,
+                    aggregate: bool = True) -> Tuple[PyTree, jax.Array]:
     """Run ``client_update`` for every client and aggregate Eq.(14).
 
     cohort_batch: leaves (cohort, b, ...); client_weights: (cohort,) = n_k.
     ``spmd_axis_name`` (e.g. ("pod","data")) pins every per-client
     intermediate — local parameter trajectories, per-client gradients — to
     the mesh cohort axes instead of letting GSPMD replicate them (the 37x
-    HBM blow-up of §Perf iteration 1).  Returns (G, mean_client_loss)."""
+    HBM blow-up of §Perf iteration 1).  Returns (G, mean_client_loss).
+
+    ``aggregate=False`` (vmap strategy only) skips the weighted mean and
+    returns the *stacked* per-client gradients (cohort, *param) so the
+    fused server engine can do the Eq.(14) reduce inside its Pallas pass
+    together with the clip-norm sum-of-squares."""
     cohort = client_weights.shape[0]
     rngs = (jax.random.split(rng, cohort) if rng is not None
             else jnp.zeros((cohort, 2), jnp.uint32))
@@ -60,12 +65,20 @@ def cohort_gradient(client_update: Callable, w_t: PyTree, cohort_batch: PyTree,
             cohort_batch, rngs)
         if grad_shardings is not None:
             g_all = jax.lax.with_sharding_constraint(g_all, grad_shardings)
-        G = weighted_mean(g_all, client_weights, agg_dtype)
         wsum = jnp.maximum(jnp.sum(client_weights.astype(jnp.float32)), 1e-30)
         mean_loss = jnp.sum(losses * client_weights.astype(jnp.float32)) / wsum
+        if not aggregate:
+            return g_all, mean_loss
+        G = weighted_mean(g_all, client_weights, agg_dtype)
         return G, mean_loss
 
     if strategy == "scan":
+        if not aggregate:
+            raise NotImplementedError(
+                "stacked gradients defeat the point of the scan strategy "
+                "(one client trajectory alive at a time); the fused engine "
+                "feeds the scan-accumulated G through its clip+apply pass "
+                "instead — see ROADMAP 'scan-strategy cohort fusion'")
         wsum = jnp.maximum(jnp.sum(client_weights.astype(jnp.float32)), 1e-30)
 
         def body(carry, inp):

@@ -44,22 +44,26 @@ def _split_microbatches(batch: PyTree, steps: int) -> PyTree:
     return jax.tree.map(rs, batch)
 
 
-def _tile_epochs(mbs: PyTree, epochs: int) -> PyTree:
-    if epochs == 1:
-        return mbs
-    return jax.tree.map(
-        lambda x: jnp.tile(x, (epochs,) + (1,) * (x.ndim - 1)), mbs)
+def _microbatch_at(mbs: PyTree, i, steps: int) -> PyTree:
+    """Microbatch for global step ``i``, cycling the schedule over epochs.
+    Dynamic-indexing ``i % steps`` inside the scan replaces the old
+    ``jnp.tile`` epoch expansion, which materialized ``epochs`` HBM copies
+    of every client batch (equality with the tiled path property-tested)."""
+    return jax.tree.map(lambda x: x[i % steps], mbs)
 
 
 def _sgd_steps(loss_fn: LossFn, w, mbs, lr, rng, *, prox_mu: float = 0.0,
                w_ref: Optional[PyTree] = None, remat: bool = True,
                n_steps: Optional[int] = None):
-    """Run SGD over the leading axis of ``mbs``.  Differentiable (keep-trace)
+    """Run SGD for ``n_steps`` (default: one pass) cycling the microbatch
+    schedule ``mbs`` (leaves (steps, b, ...)).  Differentiable (keep-trace)
     by construction — functional updates never leave the autodiff trace."""
+    steps = jax.tree.leaves(mbs)[0].shape[0]
+    if n_steps is None:
+        n_steps = steps
 
-    def step(carry, inp):
-        w, i = carry
-        mb = inp
+    def step(w, i):
+        mb = _microbatch_at(mbs, i, steps)
         step_rng = jax.random.fold_in(rng, i) if rng is not None else None
 
         def local_loss(wi):
@@ -76,11 +80,10 @@ def _sgd_steps(loss_fn: LossFn, w, mbs, lr, rng, *, prox_mu: float = 0.0,
         w = jax.tree.map(lambda p, gi: (p.astype(jnp.float32)
                                         - lr * gi.astype(jnp.float32)
                                         ).astype(p.dtype), w, g)
-        return (w, i + 1), None
+        return w, None
 
     body = jax.checkpoint(step, prevent_cse=False) if remat else step
-    (w, _), _ = lax.scan(body, (w, jnp.zeros((), jnp.int32)), mbs,
-                         length=n_steps)
+    w, _ = lax.scan(body, w, jnp.arange(n_steps))
     return w
 
 
@@ -106,8 +109,7 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
 
     Returns (g_k, eval_loss)."""
     n_kt = local_steps * local_epochs - 1          # keep-trace steps
-    mbs = _tile_epochs(_split_microbatches(batch, local_steps), local_epochs)
-    mbs_kt = jax.tree.map(lambda x: x[:n_kt], mbs)
+    mbs = _split_microbatches(batch, local_steps)
     eval_rng = jax.random.fold_in(rng, 10_000) if rng is not None else None
 
     def local_loss(w, mb, i):
@@ -120,8 +122,8 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
         return g, eval_loss
 
     # ---- forward: local SGD, saving the pre-step parameters ----
-    def fstep(w, inp):
-        mb, i = inp
+    def fstep(w, i):
+        mb = _microbatch_at(mbs, i, local_steps)
         g = jax.grad(local_loss)(w, mb, i)
         w_next = jax.tree.map(
             lambda p, gi: (p.astype(jnp.float32)
@@ -130,7 +132,7 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
         return w_next, w
 
     fbody = jax.checkpoint(fstep, prevent_cse=False) if remat else fstep
-    w_k, ws = lax.scan(fbody, w_t, (mbs_kt, jnp.arange(n_kt)))
+    w_k, ws = lax.scan(fbody, w_t, jnp.arange(n_kt))
 
     # ---- gradient evaluation on the WHOLE client batch (last epoch) ----
     eval_loss, v = jax.value_and_grad(
@@ -139,7 +141,8 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
 
     # ---- reverse: v <- v - lr * H v via jvp-of-grad ----
     def bstep(v, inp):
-        w_i, mb, i = inp
+        w_i, i = inp
+        mb = _microbatch_at(mbs, i, local_steps)
 
         def gfun(w):
             return jax.grad(local_loss)(w, mb, i)
@@ -151,8 +154,7 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
         return v, None
 
     bbody = jax.checkpoint(bstep, prevent_cse=False) if remat else bstep
-    g_k, _ = lax.scan(bbody, v, (ws, mbs_kt, jnp.arange(n_kt)),
-                      reverse=True)
+    g_k, _ = lax.scan(bbody, v, (ws, jnp.arange(n_kt)), reverse=True)
     return g_k, eval_loss
 
 
@@ -164,12 +166,12 @@ def uga_update_autodiff(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr,
     keep-trace trajectory.  Identical math to ``uga_update`` (tested); kept
     as the oracle because it is line-for-line the paper's Algorithm 1."""
     n_kt = local_steps * local_epochs - 1
-    mbs = _tile_epochs(_split_microbatches(batch, local_steps), local_epochs)
-    mbs_kt = jax.tree.map(lambda x: x[:n_kt], mbs)
+    mbs = _split_microbatches(batch, local_steps)
 
     def traced_objective(w0):
         if n_kt > 0:
-            w_k = _sgd_steps(loss_fn, w0, mbs_kt, lr, rng, remat=remat)
+            w_k = _sgd_steps(loss_fn, w0, mbs, lr, rng, remat=remat,
+                             n_steps=n_kt)
         else:
             w_k = w0
         eval_rng = jax.random.fold_in(rng, 10_000) if rng is not None else None
@@ -189,9 +191,10 @@ def fedavg_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
     Returns (pseudo_grad, final_loss); pseudo_grad = w_t - w_k.  The local
     trajectory is explicitly cut from the trace (stop_gradient) — this IS
     the biased path the paper analyses in §2.1."""
-    mbs = _tile_epochs(_split_microbatches(batch, local_steps), local_epochs)
+    mbs = _split_microbatches(batch, local_steps)
     w_k = _sgd_steps(loss_fn, w_t, mbs, lr, rng, prox_mu=prox_mu,
-                     w_ref=w_t, remat=remat)
+                     w_ref=w_t, remat=remat,
+                     n_steps=local_steps * local_epochs)
     w_k = jax.lax.stop_gradient(w_k)
     l, _ = loss_fn(w_k, batch, None)
     pseudo = jax.tree.map(

@@ -1,0 +1,130 @@
+"""Flat-buffer view of parameter/gradient pytrees for the fused server
+update engine.
+
+The server hot path (aggregate -> clip -> optimizer apply) is element-wise
+over every parameter, so the pytree structure only costs traversals there.
+This module gives the round engine a *flat* view: leaves are grouped by
+their original dtype, raveled, cast to fp32 and packed into one contiguous
+``(rows, 128)`` fp32 buffer per dtype group with **static** element offsets
+computed at trace time.  ``rows`` is padded to a multiple of ``row_align``
+(8 = the fp32 sublane tile) so the Pallas kernels in
+``repro.kernels.fused_update`` can tile the buffer directly; the zero pad
+is mathematically inert for every supported optimizer (0-gradient => 0
+update) and is dropped again by :func:`unflatten_tree`.
+
+Round-trip contract (property-tested): ``unflatten_tree(spec,
+flatten_tree(spec, tree))`` preserves structure, shapes and dtypes, with
+values equal up to the fp32 cast the legacy tree-map path performs anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+LANES = 128           # TPU lane dimension; last axis of every flat buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    index: int                     # position in jax.tree flatten order
+    shape: Tuple[int, ...]
+    dtype: str                     # original dtype (cast-back target)
+    offset: int                    # element offset inside the group buffer
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    dtype: str                     # shared original dtype of the leaves
+    leaves: Tuple[LeafSpec, ...]
+    size: int                      # total elements (before padding)
+    rows: int                      # padded row count: rows * LANES >= size
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    treedef: Any
+    groups: Tuple[GroupSpec, ...]
+
+    @property
+    def num_leaves(self) -> int:
+        return sum(len(g.leaves) for g in self.groups)
+
+
+def make_flat_spec(tree: PyTree, *, row_align: int = 8) -> FlatSpec:
+    """Build the static layout for ``tree`` (works on arrays or
+    ShapeDtypeStructs).  Groups are keyed by original leaf dtype in first-
+    appearance order; offsets follow tree-flatten order within a group."""
+    leaves, treedef = jax.tree.flatten(tree)
+    by_dtype: dict = {}
+    for i, leaf in enumerate(leaves):
+        dt = jnp.dtype(leaf.dtype).name
+        by_dtype.setdefault(dt, []).append((i, leaf))
+    groups = []
+    for dt, members in by_dtype.items():
+        specs, off = [], 0
+        for i, leaf in members:
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            specs.append(LeafSpec(index=i, shape=tuple(leaf.shape), dtype=dt,
+                                  offset=off, size=size))
+            off += size
+        rows = -(-off // LANES)                      # ceil
+        rows = -(-rows // row_align) * row_align     # pad to sublane tile
+        groups.append(GroupSpec(dtype=dt, leaves=tuple(specs), size=off,
+                                rows=rows))
+    return FlatSpec(treedef=treedef, groups=tuple(groups))
+
+
+def _pack(parts: Sequence[jax.Array], size: int, rows: int,
+          lead: Tuple[int, ...] = ()) -> jax.Array:
+    buf = jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+    pad = rows * LANES - size
+    if pad:
+        buf = jnp.pad(buf, [(0, 0)] * len(lead) + [(0, pad)])
+    return buf.reshape(lead + (rows, LANES))
+
+
+def flatten_tree(spec: FlatSpec, tree: PyTree) -> List[jax.Array]:
+    """tree -> one (rows, LANES) fp32 buffer per dtype group."""
+    leaves = jax.tree.leaves(tree)
+    out = []
+    for g in spec.groups:
+        parts = [leaves[l.index].astype(jnp.float32).reshape(l.size)
+                 for l in g.leaves]
+        out.append(_pack(parts, g.size, g.rows))
+    return out
+
+
+def flatten_stacked(spec: FlatSpec, tree: PyTree) -> List[jax.Array]:
+    """tree with a leading cohort axis on every leaf -> one
+    (cohort, rows, LANES) fp32 buffer per dtype group."""
+    leaves = jax.tree.leaves(tree)
+    cohort = leaves[0].shape[0]
+    out = []
+    for g in spec.groups:
+        parts = [leaves[l.index].astype(jnp.float32).reshape(cohort, l.size)
+                 for l in g.leaves]
+        out.append(_pack(parts, g.size, g.rows, lead=(cohort,)))
+    return out
+
+
+def unflatten_tree(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
+    """Inverse of :func:`flatten_tree` — original structure/shapes/dtypes."""
+    leaves: List[Any] = [None] * spec.num_leaves
+    for g, buf in zip(spec.groups, bufs):
+        flat = buf.reshape(g.rows * LANES)
+        for l in g.leaves:
+            x = jax.lax.slice(flat, (l.offset,), (l.offset + l.size,))
+            leaves[l.index] = x.reshape(l.shape).astype(jnp.dtype(l.dtype))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def zeros_flat(spec: FlatSpec) -> List[jax.Array]:
+    """Zero fp32 buffers in the spec's layout (optimizer state slots)."""
+    return [jnp.zeros((g.rows, LANES), jnp.float32) for g in spec.groups]

@@ -6,6 +6,21 @@
 ``make_federated_round(model, fed)`` returns ``round_fn(state, cohort_batch,
 meta_batch, client_weights, rng) -> (state, metrics)`` suitable for
 ``jax.jit`` with in/out shardings from ``repro.sharding``.
+
+Two server-step engines (``fed.fused_update``):
+
+  * legacy (False) — tree-map stages: ``weighted_mean`` -> clip-norm scale
+    -> fp32 cast -> ``server_opt.apply`` — 5+ full-model traversals.
+  * fused (True) — the flat-buffer Pallas engine
+    (``repro.kernels.fused_update``): cohort reduce + ||G||^2 in one HBM
+    pass, clip + optimizer + param write in a second.
+
+``rounds_per_call=K`` wraps the round body in ``lax.scan`` so drivers
+compile K rounds into ONE donated program and sync metrics to host once per
+K rounds; the returned function then takes K-stacked inputs
+``(cohort_batches (K, cohort, ...), meta_batches (K, ...),
+client_weights (K, cohort), rngs (K, ...))`` and returns K-stacked metrics.
+``rounds_per_call=1`` keeps the exact legacy signature.
 """
 from __future__ import annotations
 
@@ -13,12 +28,16 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.configs.base import FedConfig
 from repro.core import server_opt
 from repro.core.aggregate import cohort_gradient
 from repro.core.client import make_client_update
+from repro.core.flat import make_flat_spec
 from repro.core.meta import meta_update
+from repro.kernels.fused_update.ops import (fused_server_update,
+                                            init_flat_opt_state)
 from repro.models.model import Model
 
 PyTree = Any
@@ -26,9 +45,13 @@ PyTree = Any
 
 def init_server_state(model: Model, fed: FedConfig, key) -> PyTree:
     params = model.init(key)
+    if fed.fused_update:
+        opt = init_flat_opt_state(fed.server_opt, make_flat_spec(params))
+    else:
+        opt = server_opt.init_state(fed.server_opt, params)
     return {
         "params": params,
-        "opt": server_opt.init_state(fed.server_opt, params),
+        "opt": opt,
         "round": jnp.zeros((), jnp.int32),
     }
 
@@ -39,13 +62,14 @@ def grad_global_norm(g: PyTree) -> jax.Array:
 
 
 def make_federated_round(model: Model, fed: FedConfig, *,
-                         spmd_axis_name=None, grad_shardings=None):
+                         spmd_axis_name=None, grad_shardings=None,
+                         rounds_per_call: int = 1):
     """``spmd_axis_name``: mesh axes the cohort dimension is sharded over
     (client-parallel strategy) — forwarded to ``jax.vmap`` so per-client
     intermediates shard instead of replicate.  ``grad_shardings``: explicit
     NamedShardings for the stacked per-client gradients (cohort, *param) —
     prevents GSPMD from all-gathering per-client expert gradients before the
-    weighted mean."""
+    weighted mean.  ``rounds_per_call``: scan K rounds into one program."""
     client_update = make_client_update(
         fed.algorithm, model.loss, local_steps=fed.local_steps,
         prox_mu=fed.prox_mu, remat=fed.remat_local_steps)
@@ -55,30 +79,62 @@ def make_federated_round(model: Model, fed: FedConfig, *,
     # server step; UGA uses the paper's eta_g.
     server_lr = fed.server_lr if fed.algorithm == "uga" else 1.0
 
-    def round_fn(state: PyTree, cohort_batch: PyTree, meta_batch: PyTree,
-                 client_weights: jax.Array, rng: jax.Array
-                 ) -> Tuple[PyTree, Dict[str, jax.Array]]:
+    def one_round(state: PyTree, cohort_batch: PyTree, meta_batch: PyTree,
+                  client_weights: jax.Array, rng: jax.Array
+                  ) -> Tuple[PyTree, Dict[str, jax.Array]]:
         params = state["params"]
         r = state["round"].astype(jnp.float32)
         lr_c = fed.client_lr * (fed.lr_decay ** r)
 
         rng_c, rng_m = jax.random.split(rng)
-        G, client_loss = cohort_gradient(
-            client_update, params, cohort_batch, client_weights, lr_c,
-            rng_c, strategy=fed.cohort_strategy, agg_dtype=agg_dtype,
-            spmd_axis_name=spmd_axis_name, grad_shardings=grad_shardings)
 
-        if fed.clip_norm > 0:
-            gn = grad_global_norm(G)
-            scale = jnp.minimum(1.0, fed.clip_norm / jnp.maximum(gn, 1e-9))
-            G = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
-                                        ).astype(g.dtype), G)
+        if fed.fused_update:
+            if fed.cohort_strategy == "vmap" and grad_shardings is None:
+                g_stack, client_loss = cohort_gradient(
+                    client_update, params, cohort_batch, client_weights,
+                    lr_c, rng_c, strategy="vmap", agg_dtype=agg_dtype,
+                    spmd_axis_name=spmd_axis_name, aggregate=False)
+                w_fused = client_weights
+            else:
+                # Sharded cohorts (grad_shardings) keep the per-leaf
+                # weighted mean so its sharding constraints stay attached —
+                # the flat stack can't express them yet and GSPMD would
+                # all-gather the (cohort, *model) stack (the 37x HBM
+                # blow-up).  The scan strategy aggregates in its carry (one
+                # trajectory alive at a time).  Either way the fused engine
+                # still does clip+optimizer+write over the result; fusing
+                # the reduce itself is a ROADMAP follow-on.
+                G, client_loss = cohort_gradient(
+                    client_update, params, cohort_batch, client_weights,
+                    lr_c, rng_c, strategy=fed.cohort_strategy,
+                    agg_dtype=agg_dtype, spmd_axis_name=spmd_axis_name,
+                    grad_shardings=grad_shardings)
+                g_stack = jax.tree.map(lambda x: x[None], G)
+                w_fused = jnp.ones((1,), jnp.float32)
+            new_params, opt_state, gn_post = fused_server_update(
+                params, g_stack, w_fused, state["opt"],
+                opt=fed.server_opt, lr=server_lr,
+                clip_norm=fed.clip_norm, momentum=fed.server_momentum)
+            metrics = {"client_loss": client_loss, "grad_norm": gn_post}
+        else:
+            G, client_loss = cohort_gradient(
+                client_update, params, cohort_batch, client_weights, lr_c,
+                rng_c, strategy=fed.cohort_strategy, agg_dtype=agg_dtype,
+                spmd_axis_name=spmd_axis_name, grad_shardings=grad_shardings)
 
-        new_params, opt_state = server_opt.apply(
-            fed.server_opt, state["opt"], params, G, server_lr,
-            momentum=fed.server_momentum)
+            if fed.clip_norm > 0:
+                gn = grad_global_norm(G)
+                scale = jnp.minimum(1.0,
+                                    fed.clip_norm / jnp.maximum(gn, 1e-9))
+                G = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                            ).astype(g.dtype), G)
 
-        metrics = {"client_loss": client_loss, "grad_norm": grad_global_norm(G)}
+            new_params, opt_state = server_opt.apply(
+                fed.server_opt, state["opt"], params, G, server_lr,
+                momentum=fed.server_momentum)
+            metrics = {"client_loss": client_loss,
+                       "grad_norm": grad_global_norm(G)}
+
         if fed.meta:
             lr_m = fed.meta_lr * (fed.lr_decay ** r)
             new_params, meta_loss = meta_update(
@@ -89,4 +145,49 @@ def make_federated_round(model: Model, fed: FedConfig, *,
                      "round": state["round"] + 1}
         return new_state, metrics
 
+    if rounds_per_call == 1:
+        return one_round
+
+    assert rounds_per_call > 1, rounds_per_call
+
+    def round_fn(state: PyTree, cohort_batches: PyTree, meta_batches: PyTree,
+                 client_weights: jax.Array, rngs: jax.Array
+                 ) -> Tuple[PyTree, Dict[str, jax.Array]]:
+        def body(st, xs):
+            cb, mb, w, r = xs
+            return one_round(st, cb, mb, w, r)
+
+        return lax.scan(body, state,
+                        (cohort_batches, meta_batches, client_weights, rngs))
+
     return round_fn
+
+
+class RoundFnCache:
+    """Jitted round programs keyed by chunk size, for drivers that mix
+    full ``rounds_per_call`` chunks with a tail remainder — every driver
+    shares this cache instead of re-implementing the per-k jit dict."""
+
+    def __init__(self, model: Model, fed: FedConfig, *, donate: bool = True,
+                 **round_kwargs):
+        self._make = lambda k: make_federated_round(
+            model, fed, rounds_per_call=k, **round_kwargs)
+        self._donate = donate
+        self._fns: Dict[int, Any] = {}
+
+    def __call__(self, k: int):
+        if k not in self._fns:
+            self._fns[k] = jax.jit(
+                self._make(k),
+                donate_argnums=(0,) if self._donate else ())
+        return self._fns[k]
+
+
+def stack_round_inputs(cohort_batches, meta_batches, client_weights, rngs):
+    """K per-round host samples -> the K-stacked device inputs of a
+    ``rounds_per_call=K`` round_fn (leaves gain a leading K axis)."""
+    stack = lambda *xs: jnp.stack([jnp.asarray(x) for x in xs])
+    return (jax.tree.map(stack, *cohort_batches),
+            jax.tree.map(stack, *meta_batches),
+            stack(*client_weights),
+            stack(*rngs))

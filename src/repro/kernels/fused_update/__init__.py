@@ -1,0 +1,4 @@
+from repro.kernels.fused_update.ops import (fused_server_update,
+                                            init_flat_opt_state)
+
+__all__ = ["fused_server_update", "init_flat_opt_state"]

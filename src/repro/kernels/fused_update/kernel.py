@@ -1,0 +1,165 @@
+"""Pallas TPU kernels for the fused server update (aggregate -> clip ->
+apply) over flat fp32 buffers (layout: ``repro.core.flat``).
+
+Two kernels, at most two passes over HBM per round:
+
+  * :func:`aggregate_pass` — grid walks row tiles of the stacked client
+    gradients ``(cohort, rows, LANES)``; each step reduces the cohort axis
+    with the normalized weights (Eq. 14) and accumulates the global
+    sum-of-squares into a (1, 1) output revisited by every grid step (TPU
+    grids are sequential, so the accumulation is well-defined — same idiom
+    as the flash_attention kv axis).
+  * :func:`update_pass` — grid walks row tiles of the aggregated gradient,
+    applies the clip scale and the server optimizer (sgd/sgdm/adam/yogi)
+    and writes the new parameters (+ m/v slots) in one sweep.  Traced
+    scalars (clip scale, lr, bias corrections) ride in a (1, 4) SMEM
+    operand; static hyper-parameters (momentum, b1, b2, eps) are baked in.
+
+Both kernels run on CPU with ``interpret=True`` (how the tier-1 suite
+validates them) and lower through Mosaic on TPU unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode works without them
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+from repro.core.flat import LANES
+
+# scalar operand layout for update_pass: [scale, lr, bc1, bc2]
+N_SCALARS = 4
+
+
+def _block_rows(rows: int, target: int = 256) -> int:
+    """Largest power-of-two row tile <= target that divides ``rows``
+    (rows is a multiple of 8 by construction of FlatSpec)."""
+    br = min(target, rows)
+    while rows % br:
+        br //= 2
+    return max(br, 1)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: weighted cohort reduce + global sum-of-squares
+# ---------------------------------------------------------------------------
+def _aggregate_kernel(w_ref, g_ref, out_ref, ssq_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ssq_ref[0, 0] = jnp.float32(0.0)
+
+    g = g_ref[...]                                    # (cohort, br, LANES)
+    w = w_ref[...]                                    # (cohort, 1)
+    G = jnp.sum(g * w[:, :, None], axis=0)            # (br, LANES)
+    out_ref[...] = G
+    ssq_ref[0, 0] += jnp.sum(G * G)
+
+
+def aggregate_pass(g_stack: jax.Array, w_norm: jax.Array, *,
+                   block_rows: int = 256, interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """g_stack: (cohort, rows, LANES) fp32; w_norm: (cohort,) normalized
+    weights.  Returns (G (rows, LANES) fp32, ssq () fp32)."""
+    cohort, rows, lanes = g_stack.shape
+    assert lanes == LANES, g_stack.shape
+    br = _block_rows(rows, block_rows)
+    G, ssq = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((cohort, 1), lambda i: (0, 0)),
+            pl.BlockSpec((cohort, br, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_norm.astype(jnp.float32).reshape(cohort, 1), g_stack)
+    return G, ssq[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: clip-scale + server optimizer + parameter write
+# ---------------------------------------------------------------------------
+def _update_kernel(scal_ref, *refs, opt: str, momentum: float, b1: float,
+                   b2: float, eps: float):
+    scale = scal_ref[0, 0]
+    lr = scal_ref[0, 1]
+    g = refs[0][...] * scale                          # clipped gradient tile
+    p = refs[1][...]
+
+    if opt == "sgd":
+        new_p_ref = refs[2]
+        new_p_ref[...] = p - lr * g
+        return
+    if opt == "sgdm":
+        m_ref, new_p_ref, new_m_ref = refs[2], refs[3], refs[4]
+        m = momentum * m_ref[...] + g
+        new_m_ref[...] = m
+        new_p_ref[...] = p - lr * m
+        return
+    # adam / yogi
+    bc1 = scal_ref[0, 2]
+    bc2 = scal_ref[0, 3]
+    m_ref, v_ref = refs[2], refs[3]
+    new_p_ref, new_m_ref, new_v_ref = refs[4], refs[5], refs[6]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    if opt == "adam":
+        v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    else:  # yogi
+        v0 = v_ref[...]
+        v = v0 - (1.0 - b2) * jnp.sign(v0 - g * g) * g * g
+    new_m_ref[...] = m
+    new_v_ref[...] = v
+    new_p_ref[...] = p - lr * (m * bc1) / (jnp.sqrt(v * bc2) + eps)
+
+
+def update_pass(G: jax.Array, p: jax.Array, m: Optional[jax.Array],
+                v: Optional[jax.Array], scalars: jax.Array, *, opt: str,
+                momentum: float = 0.9, b1: float = 0.9, b2: float = 0.99,
+                eps: float = 1e-8, block_rows: int = 256,
+                interpret: bool = False):
+    """One fused optimizer sweep over a flat buffer group.
+
+    scalars: (1, N_SCALARS) fp32 = [scale, lr, bc1, bc2] (traced).
+    Returns (new_p, new_m, new_v) with None slots per optimizer arity."""
+    rows, lanes = G.shape
+    assert lanes == LANES, G.shape
+    br = _block_rows(rows, block_rows)
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    scal_spec = (pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0),
+                              memory_space=pltpu.SMEM)
+                 if pltpu is not None and not interpret
+                 else pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0)))
+    buf = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
+
+    state_in = {"sgd": [], "sgdm": [m], "adam": [m, v], "yogi": [m, v]}[opt]
+    n_out = 1 + len(state_in)
+    kernel = functools.partial(_update_kernel, opt=opt, momentum=momentum,
+                               b1=b1, b2=b2, eps=eps)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[scal_spec] + [tile] * (2 + len(state_in)),
+        out_specs=[tile] * n_out,
+        out_shape=[buf] * n_out,
+        interpret=interpret,
+    )(scalars.astype(jnp.float32), G, p, *state_in)
+    new_p = outs[0]
+    new_m = outs[1] if len(outs) > 1 else None
+    new_v = outs[2] if len(outs) > 2 else None
+    return new_p, new_m, new_v

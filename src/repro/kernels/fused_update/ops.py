@@ -1,0 +1,127 @@
+"""Public engine for the fused server-side update.
+
+:func:`fused_server_update` replaces the legacy 5+ tree-traversal server
+step (``weighted_mean`` -> clip-norm scale -> fp32 cast -> optimizer ``upd``
+-> param write) with exactly two HBM sweeps over flat per-dtype-group fp32
+buffers (layout: ``repro.core.flat``):
+
+  pass 1  kernels.aggregate_pass   cohort-weighted mean + ||G||^2
+  pass 2  kernels.update_pass      clip scale + sgd/sgdm/adam/yogi + write
+
+Numerics match ``repro.core.server_opt.apply`` on the clipped fp32 mean to
+<= 1e-5 relative (tested against both the pure-jnp ``ref`` oracle and the
+legacy tree-map path).  ``use_ref=True`` swaps the Pallas kernels for the
+oracle; ``interpret`` defaults to True off-TPU so the same code path runs
+in the CPU tier-1 suite.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat as flat_mod
+from repro.core.flat import FlatSpec, make_flat_spec
+from repro.kernels.fused_update import kernel as K
+from repro.kernels.fused_update import ref as R
+
+PyTree = Any
+
+# tree traversals per server step, for the BENCH report (legacy counts one
+# full-model jax.tree.map per stage: weighted_mean, clip scale, g32 cast,
+# m, v, step, param write — opt-dependent; fused is always two HBM sweeps)
+TRAVERSALS_LEGACY = {"sgd": 4, "sgdm": 5, "adam": 8, "yogi": 8}
+TRAVERSALS_FUSED = 2
+
+
+def init_flat_opt_state(opt: str, spec: FlatSpec) -> PyTree:
+    """Optimizer state in the flat layout (one fp32 buffer per dtype group,
+    mirroring ``server_opt.init_state``'s per-leaf zeros)."""
+    zeros = lambda: tuple(flat_mod.zeros_flat(spec))
+    if opt == "sgd":
+        return {}
+    if opt == "sgdm":
+        return {"m": zeros()}
+    if opt in ("adam", "yogi"):
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+    raise ValueError(opt)
+
+
+def fused_server_update(params: PyTree, grad_stack: PyTree,
+                        client_weights: jax.Array, opt_state: PyTree, *,
+                        opt: str = "sgd", lr, clip_norm: float = 0.0,
+                        momentum: float = 0.9, b1: float = 0.9,
+                        b2: float = 0.99, eps: float = 1e-8,
+                        spec: Optional[FlatSpec] = None,
+                        use_ref: bool = False,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[PyTree, PyTree, jax.Array]:
+    """One fused server step over stacked per-client gradients.
+
+    grad_stack: pytree matching ``params`` with a leading cohort axis on
+    every leaf; client_weights: (cohort,) n_k (un-normalized);
+    opt_state: flat state from :func:`init_flat_opt_state`.
+    Returns (new_params, new_opt_state, grad_norm_after_clip)."""
+    if spec is None:
+        spec = make_flat_spec(params)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    w = client_weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+
+    g_groups = flat_mod.flatten_stacked(spec, grad_stack)
+    p_groups = flat_mod.flatten_tree(spec, params)
+
+    # ---- pass 1: weighted reduce + sum-of-squares per dtype group --------
+    Gs, ssq = [], jnp.float32(0.0)
+    for g_stack in g_groups:
+        if use_ref:
+            G, s = R.aggregate_ref(g_stack, w)
+        else:
+            G, s = K.aggregate_pass(g_stack, w, interpret=interpret)
+        Gs.append(G)
+        ssq = ssq + s
+    gn = jnp.sqrt(ssq)
+
+    if clip_norm > 0:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+    else:
+        scale = jnp.float32(1.0)
+
+    # ---- pass 2: clip + optimizer + param write per dtype group ----------
+    if opt in ("adam", "yogi"):
+        t = opt_state["t"] + 1
+        tf = t.astype(jnp.float32)
+        bc1 = 1.0 / (1.0 - b1 ** tf)
+        bc2 = 1.0 / (1.0 - b2 ** tf)
+    else:
+        t = None
+        bc1 = bc2 = jnp.float32(1.0)
+    scalars = jnp.stack([scale, jnp.float32(lr), bc1, bc2]).reshape(1, 4)
+
+    ms = opt_state.get("m", (None,) * len(spec.groups))
+    vs = opt_state.get("v", (None,) * len(spec.groups))
+    new_p, new_m, new_v = [], [], []
+    for G, p, m, v in zip(Gs, p_groups, ms, vs):
+        if use_ref:
+            np_, nm, nv = R.update_ref(
+                G, p, m, v, opt=opt, scale=scale, lr=lr, momentum=momentum,
+                b1=b1, b2=b2, eps=eps, bc1=bc1, bc2=bc2)
+        else:
+            np_, nm, nv = K.update_pass(
+                G, p, m, v, scalars, opt=opt, momentum=momentum, b1=b1,
+                b2=b2, eps=eps, interpret=interpret)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+
+    new_params = flat_mod.unflatten_tree(spec, new_p)
+    if opt == "sgd":
+        new_state: PyTree = {}
+    elif opt == "sgdm":
+        new_state = {"m": tuple(new_m)}
+    else:
+        new_state = {"m": tuple(new_m), "v": tuple(new_v), "t": t}
+    return new_params, new_state, gn * scale

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused server-update kernels.
+
+Operates on the flat-buffer layout of ``repro.core.flat`` with exactly the
+two-pass structure of the Pallas kernels:
+
+  pass 1  (aggregate):  G = sum_k w_k g_k   and   ssq = ||G||^2
+  pass 2  (apply):      d = optimizer(G * scale);  p <- p - lr * d
+
+The per-optimizer math mirrors ``repro.core.server_opt.apply`` line for
+line (fp32 throughout); bias corrections for adam/yogi arrive as the
+precomputed scalars bc1 = 1/(1-b1^t), bc2 = 1/(1-b2^t).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate_ref(g_stack: jax.Array, w_norm: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """g_stack: (cohort, rows, lanes) fp32; w_norm: (cohort,) normalized.
+    Returns (G (rows, lanes) fp32, ssq scalar fp32)."""
+    G = jnp.sum(g_stack * w_norm[:, None, None].astype(jnp.float32), axis=0)
+    return G, jnp.sum(G * G)
+
+
+def update_ref(G: jax.Array, p: jax.Array, m: Optional[jax.Array],
+               v: Optional[jax.Array], *, opt: str, scale, lr,
+               momentum: float = 0.9, b1: float = 0.9, b2: float = 0.99,
+               eps: float = 1e-8, bc1=1.0, bc2=1.0):
+    """One flat-buffer optimizer step.  Returns (new_p, new_m, new_v) with
+    None slots matching the optimizer's state arity."""
+    g = G * scale
+    if opt == "sgd":
+        return p - lr * g, None, None
+    if opt == "sgdm":
+        m_new = momentum * m + g
+        return p - lr * m_new, m_new, None
+    if opt in ("adam", "yogi"):
+        m_new = b1 * m + (1.0 - b1) * g
+        if opt == "adam":
+            v_new = b2 * v + (1.0 - b2) * g * g
+        else:
+            v_new = v - (1.0 - b2) * jnp.sign(v - g * g) * g * g
+        step = (m_new * bc1) / (jnp.sqrt(v_new * bc2) + eps)
+        return p - lr * step, m_new, v_new
+    raise ValueError(opt)

@@ -231,6 +231,8 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             if v is not None:
                 rec.setdefault("memory", {})[attr] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax 0.4.x: list of one dict
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
     rec["cost"] = {k: float(v) for k, v in cost.items()

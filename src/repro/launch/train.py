@@ -24,7 +24,8 @@ import numpy as np
 from repro import sharding as shd
 from repro.checkpoint import save as ckpt_save
 from repro.configs import FedConfig, get_arch
-from repro.core import init_server_state, make_federated_round
+from repro.core import (init_server_state, RoundFnCache,
+                        stack_round_inputs)
 from repro.data.partition import partition_iid, partition_dirichlet
 from repro.data.pipeline import FederatedData
 from repro.data.synthetic import synthetic_tokens
@@ -59,7 +60,12 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  meta_lr: Optional[float] = None, num_clients: int = 32,
                  examples: int = 2048, iid: bool = False, seed: int = 0,
                  log_every: int = 10, ckpt_path: Optional[str] = None,
-                 strategy: str = "vmap", dtype=jnp.float32):
+                 strategy: str = "vmap", dtype=jnp.float32,
+                 fused: bool = False, rounds_per_call: int = 1):
+    """``rounds_per_call=K``: K rounds compile into ONE donated scan program
+    and metrics sync to host once per K rounds (the per-round ``float()``
+    sync was a fixed ~ms tax per round).  ``fused``: flat-buffer Pallas
+    server step (see kernels/fused_update)."""
     cfg = get_arch(arch)
     model = build_model(cfg, dtype=dtype, loss_chunk=256)
     fed = FedConfig(
@@ -67,32 +73,47 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         local_steps=local_steps, client_lr=client_lr,
         server_lr=server_lr if server_lr is not None else client_lr,
         meta_lr=meta_lr if meta_lr is not None else client_lr,
-        cohort_strategy=strategy, lr_decay=0.992)
+        cohort_strategy=strategy, lr_decay=0.992, fused_update=fused)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
                                     seed=seed)
-    round_fn = jax.jit(make_federated_round(model, fed), donate_argnums=(0,))
+    get_round_fn = RoundFnCache(model, fed)
     key = jax.random.PRNGKey(seed)
     state = init_server_state(model, fed, key)
     history = []
     t0 = time.time()
-    for r in range(rounds):
-        sample = data.sample_round(r, cohort=cohort, batch=client_batch,
-                                   share=share)
-        cohort_batch = jax.tree.map(jnp.asarray, sample["cohort_batch"])
-        meta_batch = jax.tree.map(
-            jnp.asarray, data.sample_meta(r, batch=min(client_batch * 2, 32)))
-        state, metrics = round_fn(state, cohort_batch, meta_batch,
-                                  jnp.asarray(sample["client_weights"]),
-                                  jax.random.fold_in(key, r))
-        rec = {k: float(v) for k, v in metrics.items()}
-        rec["round"] = r
-        history.append(rec)
-        if log_every and (r % log_every == 0 or r == rounds - 1):
-            print(f"[train] round {r:4d} " +
-                  " ".join(f"{k}={v:.4f}" for k, v in rec.items()
-                           if k != "round") +
-                  f" ({time.time()-t0:.1f}s)")
+    meta_bs = min(client_batch * 2, 32)
+    r = 0
+    while r < rounds:
+        k = min(max(rounds_per_call, 1), rounds - r)
+        samples = [data.sample_round(r + j, cohort=cohort,
+                                     batch=client_batch, share=share)
+                   for j in range(k)]
+        metas = [data.sample_meta(r + j, batch=meta_bs) for j in range(k)]
+        rngs = [jax.random.fold_in(key, r + j) for j in range(k)]
+        if k == 1:
+            state, metrics = get_round_fn(1)(
+                state, jax.tree.map(jnp.asarray, samples[0]["cohort_batch"]),
+                jax.tree.map(jnp.asarray, metas[0]),
+                jnp.asarray(samples[0]["client_weights"]), rngs[0])
+            recs = [{kk: float(v) for kk, v in metrics.items()}]
+        else:
+            cb, mb, wts, rks = stack_round_inputs(
+                [s["cohort_batch"] for s in samples], metas,
+                [s["client_weights"] for s in samples], rngs)
+            state, metrics = get_round_fn(k)(state, cb, mb, wts, rks)
+            recs = [{kk: float(v[j]) for kk, v in metrics.items()}
+                    for j in range(k)]
+        for j, rec in enumerate(recs):
+            rec["round"] = r + j
+            history.append(rec)
+            if log_every and ((r + j) % log_every == 0
+                              or r + j == rounds - 1):
+                print(f"[train] round {r + j:4d} " +
+                      " ".join(f"{kk}={v:.4f}" for kk, v in rec.items()
+                               if kk != "round") +
+                      f" ({time.time()-t0:.1f}s)")
+        r += k
     if ckpt_path:
         ckpt_save(ckpt_path, state["params"],
                   extra={"arch": arch, "rounds": rounds,
@@ -122,6 +143,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--fused", action="store_true",
+                    help="fused flat-buffer Pallas server step")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="scan K rounds into one compiled program")
     args = ap.parse_args()
     state, history = run_training(
         args.arch, rounds=args.rounds, cohort=args.cohort,
@@ -129,7 +154,8 @@ def main():
         algorithm=args.algorithm, meta=args.meta, share=args.share,
         local_steps=args.local_steps, client_lr=args.client_lr,
         num_clients=args.num_clients, examples=args.examples, iid=args.iid,
-        seed=args.seed, ckpt_path=args.ckpt)
+        seed=args.seed, ckpt_path=args.ckpt, fused=args.fused,
+        rounds_per_call=args.rounds_per_call)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

@@ -119,7 +119,14 @@ def _group(x, cfg: MoEConfig):
     d = x.shape[-1]
     tokens = x.reshape(-1, d)
     T = tokens.shape[0]
-    gs = min(cfg.group_size, T)
+    # decode (S=1): every token is its own group, so C >= 1 keeps every
+    # routed token instead of making B independent decode steps compete for
+    # one group's capacity.  Training shapes (S>1) keep cross-sequence
+    # grouping unchanged.
+    if x.ndim > 1 and x.shape[-2] == 1:
+        gs = 1
+    else:
+        gs = min(cfg.group_size, T)
     pad = (-T) % gs
     if pad:
         tokens = jnp.concatenate(

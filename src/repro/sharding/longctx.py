@@ -35,11 +35,16 @@ def sharded_flash_decode(q, k_cache, v_cache, index, *, mesh: Mesh,
         return combine_partials(m, l, o, axis)
 
     other = tuple(a for a in mesh.axis_names if a != axis)
-    fn = jax.shard_map(
+    if hasattr(jax, "shard_map"):           # jax >= 0.6
+        smap, check_kw = jax.shard_map, "check_vma"
+    else:                                   # jax 0.4.x
+        from jax.experimental.shard_map import shard_map as smap
+        check_kw = "check_rep"
+    fn = smap(
         local, mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
                   P()),
         out_specs=P(),
-        check_vma=False,
+        **{check_kw: False},
     )
     return fn(q, k_cache, v_cache, index).astype(v_cache.dtype)

@@ -35,8 +35,14 @@ def axis_size(mesh: Mesh, axes) -> int:
 
 
 def _maybe(mesh: Mesh, axes, dim: int):
-    """Use `axes` for a dim only if it divides evenly, else replicate."""
-    return axes if axes and dim % axis_size(mesh, axes) == 0 else None
+    """Use `axes` for a dim only if it divides evenly, else replicate.
+    Singleton tuples collapse to the bare name — older jax PartitionSpecs
+    do not normalize ('data',) == 'data'."""
+    if not (axes and dim % axis_size(mesh, axes) == 0):
+        return None
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
 
 
 def fsdp_axes(mesh: Mesh, strategy: str):

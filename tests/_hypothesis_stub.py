@@ -1,0 +1,35 @@
+"""Soft-dependency shim for ``hypothesis`` (see requirements-dev.txt).
+
+When hypothesis is installed the property tests run for real; when it is
+absent (minimal CI image) each ``@given`` test collects as a clean skip and
+every plain unit test in the same module still runs — strictly more coverage
+than a module-level ``pytest.importorskip``.
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        def _skipped():
+            pytest.skip("hypothesis not installed (pip install -r "
+                        "requirements-dev.txt)")
+        _skipped.__name__ = fn.__name__
+        _skipped.__doc__ = fn.__doc__
+        return _skipped
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _AnyStrategy:
+    """Accepts any ``st.<strategy>(...)`` call at decoration time."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()

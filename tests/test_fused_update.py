@@ -1,0 +1,235 @@
+"""Fused server-update engine (kernels/fused_update + core/flat):
+
+  * flat-buffer round-trip preserves structure/shapes/dtypes;
+  * fused Pallas kernels == pure-jnp ref oracle == legacy tree-map path
+    for all four server optimizers, with and without clipping;
+  * rounds_per_call>1 (lax.scan driver) == K sequential single-round calls;
+  * the modulo-indexed epoch schedule == the old jnp.tile expansion.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import flat as F
+from repro.core import init_server_state, make_federated_round, server_opt
+from repro.core.aggregate import weighted_mean
+from repro.core.client import fedavg_update, uga_update
+from repro.kernels.fused_update import ops as O
+from repro.models.model import Model
+
+
+def mixed_tree(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "dense": {"w": jax.random.normal(ks[0], (10, 16)),
+                  "b": jnp.zeros((16,))},
+        "half": jax.random.normal(ks[1], (7, 9)).astype(jnp.bfloat16),
+        "scalarish": jax.random.normal(ks[2], (3,)),
+        "head": jax.random.normal(ks[3], (16, 4)).astype(jnp.bfloat16),
+    }
+
+
+def make_mlp_model(d=10, h=16, classes=4):
+    def init(k):
+        k1, k2 = jax.random.split(k)
+        return {"w1": jax.random.normal(k1, (d, h)) * 0.3,
+                "w2": jax.random.normal(k2, (h, classes)) * 0.3}
+
+    def loss(w, batch, rng=None):
+        logits = jnp.tanh(batch["x"] @ w["w1"]) @ w["w2"]
+        l = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["y"][:, None], 1))
+        return l, {}
+
+    return Model(name="mlp", init=init, loss=loss)
+
+
+def sample_batch(rng, cohort, b, d=10, classes=4):
+    return {"x": jnp.asarray(rng.normal(0, 1, (cohort, b, d)),
+                             jnp.float32),
+            "y": jnp.asarray(rng.integers(0, classes, (cohort, b)),
+                             jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# flat buffers
+# ---------------------------------------------------------------------------
+def test_flat_roundtrip_structure_and_dtypes(key):
+    tree = mixed_tree(key)
+    spec = F.make_flat_spec(tree)
+    assert len(spec.groups) == 2                     # float32 + bfloat16
+    for g in spec.groups:
+        assert g.rows % 8 == 0 and g.rows * F.LANES >= g.size
+    rt = F.unflatten_tree(spec, F.flatten_tree(spec, tree))
+    assert jax.tree_util.tree_structure(rt) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_flat_stacked_matches_per_client_flatten(key):
+    tree = mixed_tree(key)
+    spec = F.make_flat_spec(tree)
+    cohort = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x.astype(jnp.float32) * (i + 1)
+                             for i in range(cohort)]).astype(x.dtype), tree)
+    bufs = F.flatten_stacked(spec, stacked)
+    for i in range(cohort):
+        one = jax.tree.map(lambda x, i=i: x[i], stacked)
+        for got, want in zip(bufs, F.flatten_tree(spec, one)):
+            np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fused engine vs ref oracle vs legacy tree-map path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt", ["sgd", "sgdm", "adam", "yogi"])
+@pytest.mark.parametrize("clip", [0.0, 0.5])
+def test_fused_matches_ref_and_legacy(key, opt, clip):
+    params = mixed_tree(key)
+    spec = F.make_flat_spec(params)
+    cohort = 5
+    gkey = jax.random.fold_in(key, 9)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(gkey, p.size), (cohort,) + p.shape,
+            jnp.float32), params)
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    lr = 0.07
+
+    out = {}
+    for use_ref in (False, True):
+        st = O.init_flat_opt_state(opt, spec)
+        newp, newst, gn = O.fused_server_update(
+            params, grads, wts, st, opt=opt, lr=lr, clip_norm=clip,
+            momentum=0.9, use_ref=use_ref)
+        out[use_ref] = (newp, gn)
+    # Pallas kernels == oracle (same flat math, bit-level expectations loose)
+    for a, b in zip(jax.tree.leaves(out[False][0]),
+                    jax.tree.leaves(out[True][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-7)
+
+    # legacy tree-map pipeline on the same inputs
+    G = weighted_mean(grads, wts)
+    if clip > 0:
+        gn_l = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                            for x in jax.tree.leaves(G)))
+        s = jnp.minimum(1.0, clip / jnp.maximum(gn_l, 1e-9))
+        G = jax.tree.map(lambda g: (g.astype(jnp.float32) * s
+                                    ).astype(g.dtype), G)
+    lp, _ = server_opt.apply(opt, server_opt.init_state(opt, params),
+                             params, G, lr, momentum=0.9)
+    for a, b in zip(jax.tree.leaves(out[False][0]), jax.tree.leaves(lp)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        rel = np.max(np.abs(a - b) / (np.abs(b) + 1e-6))
+        assert rel <= 1e-5, (opt, clip, rel)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "adam"])
+def test_fused_round_matches_legacy_round(key, opt):
+    model = make_mlp_model()
+    rng = np.random.default_rng(0)
+    batch = sample_batch(rng, cohort=4, b=16)
+    meta = {"x": batch["x"][0], "y": batch["y"][0]}
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    kw = dict(algorithm="uga", meta=True, cohort=4, local_steps=2,
+              client_lr=0.05, server_lr=0.1, meta_lr=0.05, server_opt=opt,
+              clip_norm=1.0)
+    states, metrics = {}, {}
+    for fused in (False, True):
+        fed = FedConfig(fused_update=fused, **kw)
+        rf = jax.jit(make_federated_round(model, fed))
+        st = init_server_state(model, fed, key)
+        states[fused], metrics[fused] = rf(st, batch, meta, wts, key)
+    for k in states[False]["params"]:
+        a = np.asarray(states[True]["params"][k])
+        b = np.asarray(states[False]["params"][k])
+        rel = np.max(np.abs(a - b) / (np.abs(b) + 1e-6))
+        assert rel <= 1e-5, (opt, k, rel)
+    for name in ("client_loss", "grad_norm", "meta_loss"):
+        np.testing.assert_allclose(float(metrics[True][name]),
+                                   float(metrics[False][name]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scanned multi-round driver
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", [False, True])
+def test_rounds_per_call_matches_sequential(key, fused):
+    model = make_mlp_model()
+    K = 3
+    fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                    client_lr=0.05, server_lr=0.1, meta_lr=0.05,
+                    server_opt="adam", clip_norm=1.0, lr_decay=0.9,
+                    fused_update=fused)
+    rng = np.random.default_rng(1)
+    batches = [sample_batch(rng, cohort=4, b=16) for _ in range(K)]
+    metas = [{"x": b["x"][0], "y": b["y"][0]} for b in batches]
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    rngs = jnp.stack([jax.random.fold_in(key, r) for r in range(K)])
+
+    rf1 = jax.jit(make_federated_round(model, fed))
+    st = init_server_state(model, fed, key)
+    per_round = []
+    for r in range(K):
+        st, m = rf1(st, batches[r], metas[r], wts, rngs[r])
+        per_round.append(m)
+
+    rfK = jax.jit(make_federated_round(model, fed, rounds_per_call=K))
+    stK = init_server_state(model, fed, key)
+    stK, mK = rfK(stK,
+                  jax.tree.map(lambda *xs: jnp.stack(xs), *batches),
+                  jax.tree.map(lambda *xs: jnp.stack(xs), *metas),
+                  jnp.stack([wts] * K), rngs)
+
+    assert int(stK["round"]) == int(st["round"]) == K
+    for a, b in zip(jax.tree.leaves(stK["params"]),
+                    jax.tree.leaves(st["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    for name in mK:
+        assert mK[name].shape == (K,)
+        for r in range(K):
+            np.testing.assert_allclose(float(mK[name][r]),
+                                       float(per_round[r][name]),
+                                       rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# epoch schedule: modulo indexing == the old jnp.tile expansion
+# ---------------------------------------------------------------------------
+def _tile_batch(batch, epochs):
+    return jax.tree.map(
+        lambda x: jnp.tile(x, (epochs,) + (1,) * (x.ndim - 1)), batch)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("algo", ["uga", "fedavg"])
+def test_epoch_cycling_equals_tiled_path(key, seed, algo):
+    """local_epochs=E with the in-scan modulo schedule must equal the old
+    materialized path, which is exactly local_steps*E steps over the
+    example-tiled batch (same microbatch sequence, same step rngs)."""
+    model = make_mlp_model()
+    rng = np.random.default_rng(seed)
+    batch = {"x": jnp.asarray(rng.normal(0, 1, (16, 10)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, 16), jnp.int32)}
+    steps, epochs = 2, 3
+    fn = uga_update if algo == "uga" else fedavg_update
+    g_new, l_new = fn(model.loss, model.init(key), batch, 0.05,
+                      local_steps=steps, local_epochs=epochs)
+    g_old, l_old = fn(model.loss, model.init(key), _tile_batch(batch, epochs),
+                      0.05, local_steps=steps * epochs, local_epochs=1)
+    np.testing.assert_allclose(float(l_new), float(l_old),
+                               rtol=1e-6, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(g_new), jax.tree.leaves(g_old)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

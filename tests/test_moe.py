@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs.base import MoEConfig
 from repro.models.moe import (moe_ffn, moe_ffn_einsum, moe_ffn_gather,
