@@ -45,7 +45,12 @@ def save(path: str, tree: PyTree, *, extra: Dict[str, Any] | None = None):
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (shape/dtype validated).
+
+    ``like`` may be any pytree the blob was saved from — including the full
+    server state whose fused optimizer slots are *tuples* of flat buffers
+    (``{"m": (buf, ...), ...}``); tuple positions key as their indices, so
+    the tuple-structured flat layout round-trips like any dict."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     leaves = payload["leaves"]
@@ -54,6 +59,13 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
     for p, leaf in flat_like:
         key = _SEP.join(str(getattr(x, "key", getattr(x, "idx", x)))
                         for x in p)
+        if key not in leaves:
+            raise KeyError(
+                f"checkpoint {path!r} has no leaf {key!r} — it was saved "
+                f"from a different structure (saved leaves: "
+                f"{sorted(leaves)[:8]}...).  Params-only checkpoints from "
+                f"older drivers cannot resume a full server state; restore "
+                f"them into bare params instead.")
         rec = leaves[key]
         arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
         assert tuple(arr.shape) == tuple(np.shape(leaf)), (key, arr.shape)

@@ -213,7 +213,10 @@ class FedConfig:
     meta: bool = True
     share: bool = False
     cohort: int = 16                    # clients per round (= C*K)
-    local_steps: int = 2                # total local steps; UGA: last = grad eval
+    local_steps: int = 2                # local steps per epoch; UGA: last = grad eval
+    local_epochs: int = 1               # E: passes over the local microbatch
+                                        # schedule (client batch must divide
+                                        # by local_steps; cycled E times)
     client_lr: float = 0.002            # eta   (local SGD)
     server_lr: float = 0.002            # eta_g (aggregation step size)
     meta_lr: float = 0.002              # eta_meta
@@ -233,8 +236,32 @@ class FedConfig:
                                         # keeps the legacy tree-map path.
                                         # Implies fp32 aggregation (the fused
                                         # kernels ignore grad_agg_dtype).
+    meta_mode: str = "post"             # 'post': Eq. (20) server meta step
+                                        # after aggregation (the paper's §3.2,
+                                        # default).  'through_aggregation':
+                                        # backprop the D_meta loss THROUGH the
+                                        # fused server step (custom-VJP Pallas
+                                        # backward) into hypergradients for the
+                                        # per-client aggregation weights and
+                                        # the server step size, held in the
+                                        # server state's 'ctrl' slot and
+                                        # updated each round with ctrl_lr.
+                                        # Requires fused_update + vmap cohorts.
+    ctrl_lr: float = 0.01               # hypergradient step size for the
+                                        # controllable-weights state
+                                        # (meta_mode='through_aggregation')
 
     def __post_init__(self):
         assert self.algorithm in ("fedavg", "uga", "fedprox"), self.algorithm
         assert self.cohort_strategy in ("vmap", "scan"), self.cohort_strategy
         assert self.local_steps >= 1
+        assert self.local_epochs >= 1
+        assert self.meta_mode in ("post", "through_aggregation"), self.meta_mode
+        if self.meta_mode == "through_aggregation":
+            assert self.fused_update, \
+                "through_aggregation differentiates the fused engine's " \
+                "custom VJP; set fused_update=True"
+            assert self.cohort_strategy == "vmap", \
+                "through_aggregation needs stacked per-client gradients " \
+                "(vmap cohorts); the scan carry has already aggregated"
+            assert self.server_lr > 0, "server_lr seeds exp(log_lr) > 0"

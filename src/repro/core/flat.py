@@ -125,6 +125,24 @@ def unflatten_tree(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
+def unflatten_stacked(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
+    """Inverse of :func:`flatten_stacked` — buffers with a leading cohort
+    axis ``(cohort, rows, LANES)`` back to the original structure with the
+    cohort axis on every leaf.  Completes the round-trip API for stacked
+    buffers; nothing on the hot path calls it (the custom-VJP boundary
+    sits at buffer level), but it is the tool for offline inspection of
+    per-client cotangents in model coordinates."""
+    leaves: List[Any] = [None] * spec.num_leaves
+    for g, buf in zip(spec.groups, bufs):
+        cohort = buf.shape[0]
+        flat = buf.reshape(cohort, g.rows * LANES)
+        for l in g.leaves:
+            x = jax.lax.slice(flat, (0, l.offset), (cohort, l.offset + l.size))
+            leaves[l.index] = x.reshape((cohort,) + l.shape).astype(
+                jnp.dtype(l.dtype))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
 def zeros_flat(spec: FlatSpec) -> List[jax.Array]:
     """Zero fp32 buffers in the spec's layout (optimizer state slots)."""
     return [jnp.zeros((g.rows, LANES), jnp.float32) for g in spec.groups]

@@ -1,15 +1,33 @@
 """FedMeta — controllable meta updating (§3.2, Algorithm 2).
 
-After aggregation the server takes one gradient step on the curated meta
-training set D_meta (Eq. 20), giving every round the same, *controllable*
-optimization objective regardless of which clients were sampled.
+Two meta modes:
+
+  * ``meta_update`` (``meta_mode='post'``, the paper's Eq. 20): after
+    aggregation the server takes one gradient step on the curated meta
+    training set D_meta, giving every round the same, *controllable*
+    optimization objective regardless of which clients were sampled.
+
+  * ``meta_update_through_aggregation`` (``meta_mode='through_aggregation'``):
+    instead of stepping the parameters directly, differentiate the D_meta
+    loss *through* the Eq. (14) aggregation and the server optimizer — the
+    fused engine's hand-written custom VJP (``kernels/fused_update``) makes
+    this two extra flat HBM sweeps — producing hypergradients w.r.t. the
+    per-client aggregation weight multipliers and the server step size.
+    Those live in the server state's controllable slot
+    ``ctrl = {"w_logits": (cohort,), "log_lr": ()}`` (log-space so
+    effective weights/lr stay positive) and are updated by one SGD step
+    with ``ctrl_lr`` per round — the meta-learned-aggregation scheme of
+    FedAgg / MAML-style FL personalization grafted onto the paper's
+    controllable meta update.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.fused_update.ops import fused_server_update
 
 PyTree = Any
 
@@ -28,3 +46,41 @@ def meta_update(loss_fn: Callable, params: PyTree, meta_batch: PyTree,
                        - meta_lr * gi.astype(jnp.float32)).astype(p.dtype),
         params, g)
     return new, meta_loss
+
+
+def meta_update_through_aggregation(
+        loss_fn: Callable, params: PyTree, grad_stack: PyTree,
+        client_weights: jax.Array, opt_state: PyTree, meta_batch: PyTree,
+        ctrl: Dict[str, jax.Array], *, opt: str, clip_norm: float,
+        momentum: float, ctrl_lr, rng=None
+        ) -> Tuple[PyTree, PyTree, jax.Array, Dict[str, jax.Array],
+                   Dict[str, jax.Array]]:
+    """Take this round's fused server step under the controllable weights
+    eff_w = n_k * exp(w_logits) and step size exp(log_lr), and update the
+    controllable state by the hypergradient of the D_meta loss through
+    that step (the fused engine's custom VJP).
+
+    grad_stack: stacked per-client gradients (cohort leading axis);
+    client_weights: (cohort,) n_k; ctrl: {"w_logits": (cohort,),
+    "log_lr": ()}.  Returns (new_params, new_opt_state,
+    grad_norm_after_clip, new_ctrl, metrics) — metrics carry the meta loss
+    plus the hypergradient norms so drivers can gate on finiteness."""
+
+    def objective(w_logits, log_lr):
+        eff_w = client_weights.astype(jnp.float32) * jnp.exp(w_logits)
+        new_p, new_opt, gn = fused_server_update(
+            params, grad_stack, eff_w, opt_state, opt=opt,
+            lr=jnp.exp(log_lr), clip_norm=clip_norm, momentum=momentum)
+        l, _ = loss_fn(new_p, meta_batch, rng)
+        return l, (new_p, new_opt, gn)
+
+    (meta_loss, (new_p, new_opt, gn)), (d_wl, d_llr) = jax.value_and_grad(
+        objective, argnums=(0, 1), has_aux=True)(
+            ctrl["w_logits"], ctrl["log_lr"])
+    new_ctrl = {"w_logits": ctrl["w_logits"] - ctrl_lr * d_wl,
+                "log_lr": ctrl["log_lr"] - ctrl_lr * d_llr}
+    metrics = {"meta_loss": meta_loss,
+               "ctrl_w_gnorm": jnp.sqrt(jnp.sum(d_wl * d_wl)),
+               "ctrl_lr_grad": d_llr,
+               "server_lr_eff": jnp.exp(ctrl["log_lr"])}
+    return new_p, new_opt, gn, new_ctrl, metrics

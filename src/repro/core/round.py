@@ -15,6 +15,11 @@ Two server-step engines (``fed.fused_update``):
     (``repro.kernels.fused_update``): cohort reduce + ||G||^2 in one HBM
     pass, clip + optimizer + param write in a second.
 
+``fed.meta_mode`` picks the FedMeta step: ``"post"`` (Eq. 20 parameter
+step after aggregation, default) or ``"through_aggregation"`` (fused engine
+only: hypergradients of the D_meta loss through the server step update a
+controllable per-client-weights + server-lr state — see ``core/meta.py``).
+
 ``rounds_per_call=K`` wraps the round body in ``lax.scan`` so drivers
 compile K rounds into ONE donated program and sync metrics to host once per
 K rounds; the returned function then takes K-stacked inputs
@@ -35,12 +40,23 @@ from repro.core import server_opt
 from repro.core.aggregate import cohort_gradient
 from repro.core.client import make_client_update
 from repro.core.flat import make_flat_spec
-from repro.core.meta import meta_update
+from repro.core.meta import meta_update, meta_update_through_aggregation
 from repro.kernels.fused_update.ops import (fused_server_update,
                                             init_flat_opt_state)
 from repro.models.model import Model
 
 PyTree = Any
+
+
+def resolve_server_lr(fed: FedConfig) -> float:
+    """Effective eta_g.  FedAvg/FedProx pseudo-gradients are exact parameter
+    averages only under *plain-SGD* with a unit step, so lr is forced to 1.0
+    exactly there; every other combination — UGA (the paper's eta_g), or a
+    FedOpt server optimizer (FedAdam/FedYogi/FedAvgM on pseudo-gradients) —
+    honors ``fed.server_lr``."""
+    if fed.algorithm == "uga" or fed.server_opt != "sgd":
+        return fed.server_lr
+    return 1.0
 
 
 def init_server_state(model: Model, fed: FedConfig, key) -> PyTree:
@@ -49,11 +65,19 @@ def init_server_state(model: Model, fed: FedConfig, key) -> PyTree:
         opt = init_flat_opt_state(fed.server_opt, make_flat_spec(params))
     else:
         opt = server_opt.init_state(fed.server_opt, params)
-    return {
+    state = {
         "params": params,
         "opt": opt,
         "round": jnp.zeros((), jnp.int32),
     }
+    if fed.meta and fed.meta_mode == "through_aggregation":
+        # Controllable aggregation: per-client log weight multipliers and a
+        # log server step size, meta-learned through the fused VJP.
+        state["ctrl"] = {
+            "w_logits": jnp.zeros((fed.cohort,), jnp.float32),
+            "log_lr": jnp.log(jnp.float32(resolve_server_lr(fed))),
+        }
+    return state
 
 
 def grad_global_norm(g: PyTree) -> jax.Array:
@@ -72,12 +96,15 @@ def make_federated_round(model: Model, fed: FedConfig, *,
     weighted mean.  ``rounds_per_call``: scan K rounds into one program."""
     client_update = make_client_update(
         fed.algorithm, model.loss, local_steps=fed.local_steps,
-        prox_mu=fed.prox_mu, remat=fed.remat_local_steps)
+        local_epochs=fed.local_epochs, prox_mu=fed.prox_mu,
+        remat=fed.remat_local_steps)
     agg_dtype = jnp.dtype(fed.grad_agg_dtype)
-
-    # FedAvg pseudo-gradients are exact parameter averages only with a unit
-    # server step; UGA uses the paper's eta_g.
-    server_lr = fed.server_lr if fed.algorithm == "uga" else 1.0
+    server_lr = resolve_server_lr(fed)
+    through_agg = fed.meta and fed.meta_mode == "through_aggregation"
+    if through_agg:
+        assert grad_shardings is None, \
+            "through_aggregation needs the stacked fused path; " \
+            "sharded cohorts pre-aggregate per leaf"
 
     def one_round(state: PyTree, cohort_batch: PyTree, meta_batch: PyTree,
                   client_weights: jax.Array, rng: jax.Array
@@ -111,11 +138,22 @@ def make_federated_round(model: Model, fed: FedConfig, *,
                     grad_shardings=grad_shardings)
                 g_stack = jax.tree.map(lambda x: x[None], G)
                 w_fused = jnp.ones((1,), jnp.float32)
-            new_params, opt_state, gn_post = fused_server_update(
-                params, g_stack, w_fused, state["opt"],
-                opt=fed.server_opt, lr=server_lr,
-                clip_norm=fed.clip_norm, momentum=fed.server_momentum)
-            metrics = {"client_loss": client_loss, "grad_norm": gn_post}
+            if through_agg:
+                new_params, opt_state, gn_post, new_ctrl, meta_metrics = \
+                    meta_update_through_aggregation(
+                        model.loss, params, g_stack, w_fused, state["opt"],
+                        meta_batch, state["ctrl"], opt=fed.server_opt,
+                        clip_norm=fed.clip_norm,
+                        momentum=fed.server_momentum, ctrl_lr=fed.ctrl_lr,
+                        rng=rng_m)
+                metrics = {"client_loss": client_loss, "grad_norm": gn_post,
+                           **meta_metrics}
+            else:
+                new_params, opt_state, gn_post = fused_server_update(
+                    params, g_stack, w_fused, state["opt"],
+                    opt=fed.server_opt, lr=server_lr,
+                    clip_norm=fed.clip_norm, momentum=fed.server_momentum)
+                metrics = {"client_loss": client_loss, "grad_norm": gn_post}
         else:
             G, client_loss = cohort_gradient(
                 client_update, params, cohort_batch, client_weights, lr_c,
@@ -135,7 +173,7 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             metrics = {"client_loss": client_loss,
                        "grad_norm": grad_global_norm(G)}
 
-        if fed.meta:
+        if fed.meta and not through_agg:
             lr_m = fed.meta_lr * (fed.lr_decay ** r)
             new_params, meta_loss = meta_update(
                 model.loss, new_params, meta_batch, lr_m, rng_m)
@@ -143,6 +181,8 @@ def make_federated_round(model: Model, fed: FedConfig, *,
 
         new_state = {"params": new_params, "opt": opt_state,
                      "round": state["round"] + 1}
+        if through_agg:
+            new_state["ctrl"] = new_ctrl
         return new_state, metrics
 
     if rounds_per_call == 1:

@@ -1,7 +1,7 @@
 """Pallas TPU kernels for the fused server update (aggregate -> clip ->
 apply) over flat fp32 buffers (layout: ``repro.core.flat``).
 
-Two kernels, at most two passes over HBM per round:
+Two forward kernels, at most two passes over HBM per round:
 
   * :func:`aggregate_pass` — grid walks row tiles of the stacked client
     gradients ``(cohort, rows, LANES)``; each step reduces the cohort axis
@@ -15,7 +15,25 @@ Two kernels, at most two passes over HBM per round:
     scalars (clip scale, lr, bias corrections) ride in a (1, 4) SMEM
     operand; static hyper-parameters (momentum, b1, b2, eps) are baked in.
 
-Both kernels run on CPU with ``interpret=True`` (how the tier-1 suite
+Two backward kernels give the pair a hand-written VJP (wired up by the
+``jax.custom_vjp`` ops in ``ops.py``) so meta-learning *through* the
+aggregation never falls back to XLA re-differentiating the engine:
+
+  * :func:`aggregate_pass_bwd` — scatters the total cotangent of the mean
+    ``dG + 2*dssq*G`` back to the ``(cohort, rows, LANES)`` stack
+    (``dg_k = w_k * dGt``) and accumulates the per-client weight cotangents
+    ``dw_k = <g_k, dGt>`` into a (cohort, 1) output revisited by every grid
+    step.
+  * :func:`update_pass_bwd` — replays the optimizer recurrence from the
+    saved (G, m, v, scalars) residuals and pushes the output cotangents
+    (d new_p, d new_m, d new_v) back into gradient / opt-state cotangents
+    plus the (1, 4) scalar cotangents [dscale, dlr, dbc1, dbc2].  ``sign``
+    in yogi is treated as locally constant (the same zero-derivative
+    convention XLA autodiff uses for ``jnp.sign``), and the ``sqrt`` factor
+    is zero-guarded so the zero-padded tail rows of the flat layout produce
+    exact zeros instead of ``0 * inf`` NaNs.
+
+All four kernels run on CPU with ``interpret=True`` (how the tier-1 suite
 validates them) and lower through Mosaic on TPU unchanged.
 """
 from __future__ import annotations
@@ -163,3 +181,183 @@ def update_pass(G: jax.Array, p: jax.Array, m: Optional[jax.Array],
     new_m = outs[1] if len(outs) > 1 else None
     new_v = outs[2] if len(outs) > 2 else None
     return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Backward pass 1: cotangent-of-mean scatter + per-client weight cotangents
+# ---------------------------------------------------------------------------
+def _aggregate_bwd_kernel(w_ref, dssq_ref, g_ref, G_ref, dG_ref,
+                          dg_ref, dw_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    # total mean cotangent: forward was G = sum_k w_k g_k, ssq = <G, G>
+    dGt = dG_ref[...] + 2.0 * dssq_ref[0, 0] * G_ref[...]     # (br, LANES)
+    dg_ref[...] = w_ref[...][:, :, None] * dGt[None, :, :]    # dg_k = w_k dGt
+    dw_ref[...] += jnp.sum(jnp.sum(g_ref[...] * dGt[None, :, :], axis=2),
+                           axis=1, keepdims=True)             # dw_k = <g_k,dGt>
+
+
+def aggregate_pass_bwd(g_stack: jax.Array, w_norm: jax.Array, G: jax.Array,
+                       dG: jax.Array, dssq: jax.Array, *,
+                       block_rows: int = 256, interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """VJP of :func:`aggregate_pass` w.r.t. (g_stack, w_norm).
+
+    g_stack/(dG, dssq): primals/cotangents as produced by the forward; G is
+    the saved forward output.  Returns (dg_stack (cohort, rows, LANES),
+    dw (cohort,))."""
+    cohort, rows, lanes = g_stack.shape
+    assert lanes == LANES, g_stack.shape
+    br = _block_rows(rows, block_rows)
+    dg, dw = pl.pallas_call(
+        _aggregate_bwd_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((cohort, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((cohort, br, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cohort, br, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((cohort, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cohort, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((cohort, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_norm.astype(jnp.float32).reshape(cohort, 1),
+      dssq.astype(jnp.float32).reshape(1, 1), g_stack, G, dG)
+    return dg, dw[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward pass 2: cotangents through clip-scale + optimizer recurrence
+# ---------------------------------------------------------------------------
+def _update_bwd_kernel(scal_ref, *refs, opt: str, momentum: float, b1: float,
+                       b2: float, eps: float):
+    i = pl.program_id(0)
+    s = scal_ref[0, 0]
+    lr = scal_ref[0, 1]
+    G = refs[0][...]
+    g = G * s                                         # clipped gradient tile
+    dbc1 = dbc2 = jnp.float32(0.0)
+
+    if opt == "sgd":
+        # p' = p - lr * g
+        dpn_ref, dG_ref, dscal_ref = refs[1], refs[2], refs[3]
+        dpn = dpn_ref[...]
+        dg = -lr * dpn
+        dlr = -jnp.sum(g * dpn)
+    elif opt == "sgdm":
+        # m' = mu m + g;  p' = p - lr m'
+        m_ref, dpn_ref, dmn_ct_ref = refs[1], refs[2], refs[3]
+        dG_ref, dm_ref, dscal_ref = refs[4], refs[5], refs[6]
+        dpn = dpn_ref[...]
+        m_new = momentum * m_ref[...] + g
+        dmn = dmn_ct_ref[...] - lr * dpn
+        dlr = -jnp.sum(m_new * dpn)
+        dg = dmn
+        dm_ref[...] = momentum * dmn
+    else:  # adam / yogi: p' = p - lr * (m' bc1) / (sqrt(v' bc2) + eps)
+        bc1 = scal_ref[0, 2]
+        bc2 = scal_ref[0, 3]
+        m_ref, v_ref = refs[1], refs[2]
+        dpn_ref, dmn_ct_ref, dvn_ct_ref = refs[3], refs[4], refs[5]
+        dG_ref, dm_ref, dv_ref, dscal_ref = refs[6], refs[7], refs[8], refs[9]
+        dpn = dpn_ref[...]
+        m_new = b1 * m_ref[...] + (1.0 - b1) * g
+        if opt == "adam":
+            v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+        else:  # yogi (sign treated locally constant, like XLA's jnp.sign)
+            sgn = jnp.sign(v_ref[...] - g * g)
+            v_new = v_ref[...] - (1.0 - b2) * sgn * g * g
+        rs = jnp.sqrt(v_new * bc2)
+        denom = rs + eps
+        step = m_new * bc1 / denom
+        dstep = -lr * dpn
+        dlr = -jnp.sum(step * dpn)
+        dmn = dmn_ct_ref[...] + dstep * (bc1 / denom)
+        dbc1 = jnp.sum(dstep * m_new / denom)
+        ddenom = -dstep * step / denom
+        # d sqrt blows up at 0; the padded tail rows (g = m = v = 0) must
+        # stay exact zeros, so zero-guard the 1/(2 sqrt) factor.
+        inv2rs = jnp.where(rs > 0.0, 0.5 / jnp.maximum(rs, 1e-30), 0.0)
+        dvn = dvn_ct_ref[...] + ddenom * bc2 * inv2rs
+        dbc2 = jnp.sum(ddenom * v_new * inv2rs)
+        dm_ref[...] = b1 * dmn
+        if opt == "adam":
+            dv_ref[...] = b2 * dvn
+            dg = (1.0 - b1) * dmn + 2.0 * (1.0 - b2) * g * dvn
+        else:
+            dv_ref[...] = dvn
+            dg = (1.0 - b1) * dmn - 2.0 * (1.0 - b2) * sgn * g * dvn
+
+    dG_ref[...] = s * dg
+
+    @pl.when(i == 0)
+    def _init():
+        dscal_ref[0, 0] = jnp.float32(0.0)
+        dscal_ref[0, 1] = jnp.float32(0.0)
+        dscal_ref[0, 2] = jnp.float32(0.0)
+        dscal_ref[0, 3] = jnp.float32(0.0)
+
+    dscal_ref[0, 0] += jnp.sum(G * dg)                # dscale
+    dscal_ref[0, 1] += dlr
+    dscal_ref[0, 2] += dbc1
+    dscal_ref[0, 3] += dbc2
+
+
+def update_pass_bwd(G: jax.Array, m: Optional[jax.Array],
+                    v: Optional[jax.Array], scalars: jax.Array,
+                    d_new_p: jax.Array, d_new_m: Optional[jax.Array],
+                    d_new_v: Optional[jax.Array], *, opt: str,
+                    momentum: float = 0.9, b1: float = 0.9, b2: float = 0.99,
+                    eps: float = 1e-8, block_rows: int = 256,
+                    interpret: bool = False):
+    """VJP of :func:`update_pass` w.r.t. (G, m, v, scalars); the param
+    cotangent is the identity (p' = p - lr * step) and handled by the
+    caller.  (G, m, v, scalars) are the saved forward residuals — the
+    optimizer recurrence is replayed in-kernel rather than saving m'/v'.
+
+    Returns (dG, dm, dv, dscalars (1, N_SCALARS)) with None slots matching
+    the optimizer's state arity."""
+    rows, lanes = G.shape
+    assert lanes == LANES, G.shape
+    br = _block_rows(rows, block_rows)
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    # same SMEM placement as the forward's scalar operand; the (1, 4)
+    # cotangent OUTPUT stays in VMEM like the forward's (1, 1) ssq
+    scal_in = (pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0),
+                            memory_space=pltpu.SMEM)
+               if pltpu is not None and not interpret
+               else pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0)))
+    scal_out = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
+    buf = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
+    scal_buf = jax.ShapeDtypeStruct((1, N_SCALARS), jnp.float32)
+
+    state_in = {"sgd": [], "sgdm": [m], "adam": [m, v], "yogi": [m, v]}[opt]
+    ct_in = {"sgd": [d_new_p], "sgdm": [d_new_p, d_new_m],
+             "adam": [d_new_p, d_new_m, d_new_v],
+             "yogi": [d_new_p, d_new_m, d_new_v]}[opt]
+    n_state = len(state_in)
+    kernel = functools.partial(_update_bwd_kernel, opt=opt, momentum=momentum,
+                               b1=b1, b2=b2, eps=eps)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[scal_in] + [tile] * (1 + n_state + len(ct_in)),
+        out_specs=[tile] * (1 + n_state) + [scal_out],
+        out_shape=[buf] * (1 + n_state) + [scal_buf],
+        interpret=interpret,
+    )(scalars.astype(jnp.float32), G, *state_in, *ct_in)
+    dG = outs[0]
+    dm = outs[1] if n_state >= 1 else None
+    dv = outs[2] if n_state >= 2 else None
+    return dG, dm, dv, outs[-1]

@@ -13,9 +13,23 @@ Numerics match ``repro.core.server_opt.apply`` on the clipped fp32 mean to
 legacy tree-map path).  ``use_ref=True`` swaps the Pallas kernels for the
 oracle; ``interpret`` defaults to True off-TPU so the same code path runs
 in the CPU tier-1 suite.
+
+The engine is **differentiable**: each kernel pair is wrapped in a
+``jax.custom_vjp`` (:func:`_agg_vjp` / :func:`_upd_vjp`) whose backward is
+the hand-written ``aggregate_pass_bwd`` / ``update_pass_bwd`` Pallas
+kernel (or the matching ``ref`` oracle under ``use_ref=True``), so
+``jax.grad`` through :func:`fused_server_update` — w.r.t. the stacked
+per-client gradients, the client weights, the learning rate and the
+parameters — costs two more flat HBM sweeps instead of XLA
+re-differentiating the engine.  Only the tiny scalar glue (weight
+normalization, ||G||, clip scale, bias corrections) is left to XLA.  This
+is what powers ``meta_mode="through_aggregation"`` (``core/meta.py``):
+hypergradients of the meta loss w.r.t. per-client aggregation weights and
+the server step size.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Tuple
 
 import jax
@@ -48,6 +62,72 @@ def init_flat_opt_state(opt: str, spec: FlatSpec) -> PyTree:
     raise ValueError(opt)
 
 
+@functools.lru_cache(maxsize=None)
+def _agg_vjp(use_ref: bool, interpret: bool):
+    """custom_vjp over the aggregate pass: (g_stack, w_norm) -> (G, ssq)."""
+
+    @jax.custom_vjp
+    def agg(g_stack, w_norm):
+        if use_ref:
+            return R.aggregate_ref(g_stack, w_norm)
+        return K.aggregate_pass(g_stack, w_norm, interpret=interpret)
+
+    def fwd(g_stack, w_norm):
+        G, ssq = agg(g_stack, w_norm)
+        return (G, ssq), (g_stack, w_norm, G)
+
+    def bwd(res, cts):
+        g_stack, w_norm, G = res
+        dG, dssq = cts
+        if use_ref:
+            return R.aggregate_bwd_ref(g_stack, w_norm, G, dG, dssq)
+        return K.aggregate_pass_bwd(g_stack, w_norm, G, dG, dssq,
+                                    interpret=interpret)
+
+    agg.defvjp(fwd, bwd)
+    return agg
+
+
+@functools.lru_cache(maxsize=None)
+def _upd_vjp(opt: str, momentum: float, b1: float, b2: float, eps: float,
+             use_ref: bool, interpret: bool):
+    """custom_vjp over the update pass:
+    (G, p, m, v, scalars) -> (new_p, new_m, new_v).
+
+    m/v (and their outputs/cotangents) are None for optimizers without the
+    slot — None is an empty pytree, so custom_vjp threads it through.  The
+    scalar cotangent covers [scale, lr, bc1, bc2]; lr's flows to meta-
+    learned server step sizes, bc1/bc2's die at the int step counter."""
+    hp = dict(opt=opt, momentum=momentum, b1=b1, b2=b2, eps=eps)
+
+    @jax.custom_vjp
+    def upd(G, p, m, v, scalars):
+        if use_ref:
+            return R.update_ref(G, p, m, v, scale=scalars[0, 0],
+                                lr=scalars[0, 1], bc1=scalars[0, 2],
+                                bc2=scalars[0, 3], **hp)
+        return K.update_pass(G, p, m, v, scalars, interpret=interpret, **hp)
+
+    def fwd(G, p, m, v, scalars):
+        out = upd(G, p, m, v, scalars)
+        return out, (G, m, v, scalars)
+
+    def bwd(res, cts):
+        G, m, v, scalars = res
+        d_new_p, d_new_m, d_new_v = cts
+        if use_ref:
+            dG, dm, dv, dscal = R.update_bwd_ref(
+                G, m, v, scalars, d_new_p, d_new_m, d_new_v, **hp)
+        else:
+            dG, dm, dv, dscal = K.update_pass_bwd(
+                G, m, v, scalars, d_new_p, d_new_m, d_new_v,
+                interpret=interpret, **hp)
+        return dG, d_new_p, dm, dv, dscal    # dp = d_new_p (p' = p - lr*d)
+
+    upd.defvjp(fwd, bwd)
+    return upd
+
+
 def fused_server_update(params: PyTree, grad_stack: PyTree,
                         client_weights: jax.Array, opt_state: PyTree, *,
                         opt: str = "sgd", lr, clip_norm: float = 0.0,
@@ -73,14 +153,13 @@ def fused_server_update(params: PyTree, grad_stack: PyTree,
 
     g_groups = flat_mod.flatten_stacked(spec, grad_stack)
     p_groups = flat_mod.flatten_tree(spec, params)
+    agg = _agg_vjp(use_ref, interpret)
+    upd = _upd_vjp(opt, momentum, b1, b2, eps, use_ref, interpret)
 
     # ---- pass 1: weighted reduce + sum-of-squares per dtype group --------
     Gs, ssq = [], jnp.float32(0.0)
     for g_stack in g_groups:
-        if use_ref:
-            G, s = R.aggregate_ref(g_stack, w)
-        else:
-            G, s = K.aggregate_pass(g_stack, w, interpret=interpret)
+        G, s = agg(g_stack, w)
         Gs.append(G)
         ssq = ssq + s
     gn = jnp.sqrt(ssq)
@@ -105,14 +184,7 @@ def fused_server_update(params: PyTree, grad_stack: PyTree,
     vs = opt_state.get("v", (None,) * len(spec.groups))
     new_p, new_m, new_v = [], [], []
     for G, p, m, v in zip(Gs, p_groups, ms, vs):
-        if use_ref:
-            np_, nm, nv = R.update_ref(
-                G, p, m, v, opt=opt, scale=scale, lr=lr, momentum=momentum,
-                b1=b1, b2=b2, eps=eps, bc1=bc1, bc2=bc2)
-        else:
-            np_, nm, nv = K.update_pass(
-                G, p, m, v, scalars, opt=opt, momentum=momentum, b1=b1,
-                b2=b2, eps=eps, interpret=interpret)
+        np_, nm, nv = upd(G, p, m, v, scalars)
         new_p.append(np_)
         new_m.append(nm)
         new_v.append(nv)

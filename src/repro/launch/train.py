@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sharding as shd
+from repro.checkpoint import restore as ckpt_restore
 from repro.checkpoint import save as ckpt_save
 from repro.configs import FedConfig, get_arch
 from repro.core import (init_server_state, RoundFnCache,
@@ -56,23 +57,31 @@ def build_synthetic_fed_data(cfg, *, num_clients: int, examples: int,
 def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  seq: int, algorithm: str = "uga", meta: bool = True,
                  share: bool = False, local_steps: int = 2,
-                 client_lr: float = 0.01, server_lr: Optional[float] = None,
-                 meta_lr: Optional[float] = None, num_clients: int = 32,
-                 examples: int = 2048, iid: bool = False, seed: int = 0,
-                 log_every: int = 10, ckpt_path: Optional[str] = None,
-                 strategy: str = "vmap", dtype=jnp.float32,
-                 fused: bool = False, rounds_per_call: int = 1):
+                 local_epochs: int = 1, client_lr: float = 0.01,
+                 server_lr: Optional[float] = None,
+                 meta_lr: Optional[float] = None, server_opt: str = "sgd",
+                 meta_mode: str = "post", ctrl_lr: float = 0.01,
+                 num_clients: int = 32, examples: int = 2048,
+                 iid: bool = False, seed: int = 0, log_every: int = 10,
+                 ckpt_path: Optional[str] = None,
+                 resume: Optional[str] = None, strategy: str = "vmap",
+                 dtype=jnp.float32, fused: bool = False,
+                 rounds_per_call: int = 1):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
     and metrics sync to host once per K rounds (the per-round ``float()``
     sync was a fixed ~ms tax per round).  ``fused``: flat-buffer Pallas
-    server step (see kernels/fused_update)."""
+    server step (see kernels/fused_update).  ``resume``: path of a
+    full-server-state checkpoint written by ``ckpt_path`` — training
+    continues from its round counter toward ``rounds`` total."""
     cfg = get_arch(arch)
     model = build_model(cfg, dtype=dtype, loss_chunk=256)
     fed = FedConfig(
         algorithm=algorithm, meta=meta, share=share, cohort=cohort,
-        local_steps=local_steps, client_lr=client_lr,
+        local_steps=local_steps, local_epochs=local_epochs,
+        client_lr=client_lr,
         server_lr=server_lr if server_lr is not None else client_lr,
         meta_lr=meta_lr if meta_lr is not None else client_lr,
+        server_opt=server_opt, meta_mode=meta_mode, ctrl_lr=ctrl_lr,
         cohort_strategy=strategy, lr_decay=0.992, fused_update=fused)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
@@ -80,10 +89,16 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
     get_round_fn = RoundFnCache(model, fed)
     key = jax.random.PRNGKey(seed)
     state = init_server_state(model, fed, key)
+    start_round = 0
+    if resume:
+        state, extra = ckpt_restore(resume, state)
+        start_round = int(state["round"])
+        print(f"[train] resumed {resume} at round {start_round} "
+              f"(saved by arch={extra.get('arch')})")
     history = []
     t0 = time.time()
     meta_bs = min(client_batch * 2, 32)
-    r = 0
+    r = start_round
     while r < rounds:
         k = min(max(rounds_per_call, 1), rounds - r)
         samples = [data.sample_round(r + j, cohort=cohort,
@@ -115,10 +130,14 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                       f" ({time.time()-t0:.1f}s)")
         r += k
     if ckpt_path:
-        ckpt_save(ckpt_path, state["params"],
+        # Full server state — params, optimizer state (incl. the fused
+        # engine's tuple-structured flat buffers), the controllable-weights
+        # slot when present, and the round counter — so --resume restarts
+        # mid-run without losing FedOpt momentum or meta-learned weights.
+        ckpt_save(ckpt_path, state,
                   extra={"arch": arch, "rounds": rounds,
                          "algorithm": algorithm})
-        print(f"[train] saved params to {ckpt_path}")
+        print(f"[train] saved server state to {ckpt_path}")
     return state, history
 
 
@@ -136,12 +155,34 @@ def main():
     ap.set_defaults(meta=True)
     ap.add_argument("--share", action="store_true")
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-epochs", type=int, default=1,
+                    help="E: passes over the local microbatch schedule")
     ap.add_argument("--client-lr", type=float, default=0.01)
+    ap.add_argument("--server-lr", type=float, default=None,
+                    help="eta_g (default: --client-lr); applied for UGA and "
+                         "any non-SGD server optimizer")
+    ap.add_argument("--meta-lr", type=float, default=None,
+                    help="eta_meta (default: --client-lr)")
+    ap.add_argument("--server-opt", default="sgd",
+                    choices=["sgd", "sgdm", "adam", "yogi"])
+    ap.add_argument("--strategy", default="vmap", choices=["vmap", "scan"],
+                    help="cohort execution: client-parallel vmap or "
+                         "client-sequential scan")
+    ap.add_argument("--meta-mode", default="post",
+                    choices=["post", "through_aggregation"],
+                    help="FedMeta step: post-aggregation parameter step, or "
+                         "hypergradients through the fused aggregation "
+                         "(requires --fused)")
+    ap.add_argument("--ctrl-lr", type=float, default=0.01,
+                    help="controllable-weights step size "
+                         "(--meta-mode through_aggregation)")
     ap.add_argument("--num-clients", type=int, default=32)
     ap.add_argument("--examples", type=int, default=2048)
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint written by --ckpt to continue from")
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--fused", action="store_true",
                     help="fused flat-buffer Pallas server step")
@@ -152,9 +193,13 @@ def main():
         args.arch, rounds=args.rounds, cohort=args.cohort,
         client_batch=args.client_batch, seq=args.seq,
         algorithm=args.algorithm, meta=args.meta, share=args.share,
-        local_steps=args.local_steps, client_lr=args.client_lr,
-        num_clients=args.num_clients, examples=args.examples, iid=args.iid,
-        seed=args.seed, ckpt_path=args.ckpt, fused=args.fused,
+        local_steps=args.local_steps, local_epochs=args.local_epochs,
+        client_lr=args.client_lr, server_lr=args.server_lr,
+        meta_lr=args.meta_lr, server_opt=args.server_opt,
+        meta_mode=args.meta_mode, ctrl_lr=args.ctrl_lr,
+        strategy=args.strategy, num_clients=args.num_clients,
+        examples=args.examples, iid=args.iid, seed=args.seed,
+        ckpt_path=args.ckpt, resume=args.resume, fused=args.fused,
         rounds_per_call=args.rounds_per_call)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),

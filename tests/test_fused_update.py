@@ -3,6 +3,10 @@
   * flat-buffer round-trip preserves structure/shapes/dtypes;
   * fused Pallas kernels == pure-jnp ref oracle == legacy tree-map path
     for all four server optimizers, with and without clipping;
+  * the custom-VJP backward: ``jax.grad`` through ``fused_server_update``
+    (w.r.t. per-client gradient stack, client weights, server lr) ==
+    autodiff through the legacy tree-map path, for both the Pallas bwd
+    kernels and the ref oracle bwd;
   * rounds_per_call>1 (lax.scan driver) == K sequential single-round calls;
   * the modulo-indexed epoch schedule == the old jnp.tile expansion.
 """
@@ -83,6 +87,22 @@ def test_flat_stacked_matches_per_client_flatten(key):
         one = jax.tree.map(lambda x, i=i: x[i], stacked)
         for got, want in zip(bufs, F.flatten_tree(spec, one)):
             np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want))
+
+
+def test_unflatten_stacked_inverts_flatten_stacked(key):
+    tree = mixed_tree(key)
+    spec = F.make_flat_spec(tree)
+    cohort = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x.astype(jnp.float32) * (i + 1)
+                             for i in range(cohort)]).astype(x.dtype), tree)
+    rt = F.unflatten_stacked(spec, F.flatten_stacked(spec, stacked))
+    assert jax.tree_util.tree_structure(rt) == \
+        jax.tree_util.tree_structure(stacked)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(stacked)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +230,152 @@ def test_rounds_per_call_matches_sequential(key, fused):
 def _tile_batch(batch, epochs):
     return jax.tree.map(
         lambda x: jnp.tile(x, (epochs,) + (1,) * (x.ndim - 1)), batch)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP backward: jax.grad through the fused engine == legacy autodiff
+# ---------------------------------------------------------------------------
+def f32_tree(key):
+    """All-f32 mixed-shape params (grad comparisons at 1e-5 need both paths
+    to share the leaf dtype; bf16 leaves round each path differently)."""
+    ks = jax.random.split(key, 3)
+    return {"w1": jax.random.normal(ks[0], (10, 16)) * 0.3,
+            "w2": jax.random.normal(ks[1], (16, 4)) * 0.3,
+            "b": jax.random.normal(ks[2], (5,))}
+
+
+def _coeff_like(key, tree, salt):
+    return jax.tree.map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(key, p.size + salt), p.shape), tree)
+
+
+def _tree_dot(a, b):
+    return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def assert_grads_close(got, want, tol=1e-5):
+    """Per-leaf max error <= tol * the leaf's gradient scale (fp32
+    reduction order differs between the engines, so elementwise relative
+    error on entries ~1000x below the leaf scale is pure ulp noise)."""
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(float(np.max(np.abs(b))), 1e-8)
+        err = float(np.max(np.abs(a - b))) / scale
+        assert err <= tol, (a.shape, err)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "sgdm", "adam", "yogi"])
+@pytest.mark.parametrize("clip", [0.0, 0.5])
+@pytest.mark.parametrize("use_ref", [False, True])
+def test_grad_through_fused_matches_legacy_autodiff(key, opt, clip, use_ref):
+    """d(objective)/d(grad_stack, client_weights, lr) through the fused
+    custom VJP == autodiff through the legacy tree-map path, where the
+    objective touches new params, the clipped grad norm AND the new
+    optimizer state (so every backward-kernel output cotangent is live).
+
+    adam/yogi use a warm (t=5, random m, v>0) state: at t=1 from zeros the
+    update saturates to lr*sign(g) whose g-derivative is a catastrophic
+    fp32 cancellation in ANY implementation — the same conditioning caveat
+    the forward bench documents for its numerics gate."""
+    params = f32_tree(key)
+    spec = F.make_flat_spec(params)
+    cohort = 5
+    gkey = jax.random.fold_in(key, 9)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(gkey, p.size), (cohort,) + p.shape,
+            jnp.float32), params)
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    lr = 0.07
+    c_p = _coeff_like(key, params, 7)
+    c_m = _coeff_like(key, params, 8)
+    c_v = _coeff_like(key, params, 9)
+    m_tree = jax.tree.map(lambda p: 0.3 * p, _coeff_like(key, params, 11))
+    v_tree = jax.tree.map(lambda p: 0.1 + jnp.abs(p),
+                          _coeff_like(key, params, 12))
+    t0 = 5
+
+    def _flat_dot(bufs, coeff_tree):
+        return sum(jnp.sum(a * c) for a, c in
+                   zip(bufs, F.flatten_tree(spec, coeff_tree)))
+
+    def fused_obj(g, w, lr_):
+        st = O.init_flat_opt_state(opt, spec)
+        if "m" in st:
+            st["m"] = tuple(F.flatten_tree(spec, m_tree))
+        if "v" in st:
+            st["v"] = tuple(F.flatten_tree(spec, v_tree))
+            st["t"] = jnp.asarray(t0, jnp.int32)
+        newp, newst, gn = O.fused_server_update(
+            params, g, w, st, opt=opt, lr=lr_, clip_norm=clip,
+            momentum=0.9, use_ref=use_ref)
+        obj = _tree_dot(newp, c_p) + 0.3 * gn
+        if "m" in newst:
+            obj = obj + _flat_dot(newst["m"], c_m)
+        if "v" in newst:
+            obj = obj + _flat_dot(newst["v"], c_v)
+        return obj
+
+    def legacy_obj(g, w, lr_):
+        G = weighted_mean(g, w)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                          for x in jax.tree.leaves(G)))
+        if clip > 0:
+            s = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+            G = jax.tree.map(lambda x: x * s, G)
+            gn = gn * s
+        st = server_opt.init_state(opt, params)
+        if "m" in st:
+            st["m"] = m_tree
+        if "v" in st:
+            st["v"] = v_tree
+            st["t"] = jnp.asarray(t0, jnp.int32)
+        newp, newst = server_opt.apply(opt, st, params, G, lr_, momentum=0.9)
+        obj = _tree_dot(newp, c_p) + 0.3 * gn
+        if "m" in newst:
+            obj = obj + _tree_dot(newst["m"], c_m)
+        if "v" in newst:
+            obj = obj + _tree_dot(newst["v"], c_v)
+        return obj
+
+    fg = jax.grad(fused_obj, argnums=(0, 1, 2))(grads, wts, lr)
+    lg = jax.grad(legacy_obj, argnums=(0, 1, 2))(grads, wts, lr)
+    assert_grads_close(fg, lg)
+
+
+@pytest.mark.parametrize("opt", ["sgd", "adam"])
+def test_grad_wrt_params_through_fused_matches_legacy(key, opt):
+    """Cotangents also flow into the *parameters* (dp = d new_p through
+    p' = p - lr*step is the identity in the custom bwd)."""
+    params = f32_tree(key)
+    spec = F.make_flat_spec(params)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(key, p.size + 1), (3,) + p.shape), params)
+    wts = jnp.asarray([1.0, 2.0, 3.0])
+    c_p = _coeff_like(key, params, 7)
+
+    def fused_obj(p):
+        st = O.init_flat_opt_state(opt, spec)
+        newp, _, _ = O.fused_server_update(p, grads, wts, st, opt=opt,
+                                           lr=0.07, clip_norm=0.5)
+        return _tree_dot(newp, c_p)
+
+    def legacy_obj(p):
+        G = weighted_mean(grads, wts)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                          for x in jax.tree.leaves(G)))
+        s = jnp.minimum(1.0, 0.5 / jnp.maximum(gn, 1e-9))
+        G = jax.tree.map(lambda x: x * s, G)
+        newp, _ = server_opt.apply(opt, server_opt.init_state(opt, p), p,
+                                   G, 0.07)
+        return _tree_dot(newp, c_p)
+
+    assert_grads_close(jax.grad(fused_obj)(params),
+                       jax.grad(legacy_obj)(params))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
