@@ -9,6 +9,12 @@ round (exactly the old ``launch/train.py`` loop); the fused arm compiles
 ``rounds_per_call`` rounds into one donated ``lax.scan`` program and syncs
 once per chunk.
 
+A scan-strategy section times the client-sequential cohort the same two
+ways: the legacy pytree-carry scan with per-round dispatch vs the
+streaming flat-buffer accumulation (the scan carry IS the fused engine's
+dtype-group buffers; kernels/fused_update ``accumulate_pass``) under the
+scanned driver.
+
 A backward section times the *differentiated* server step — the
 meta-through-aggregation hypergradient d(meta loss)/d(client weights,
 server lr) — through the fused engine's hand-written custom VJP vs XLA
@@ -64,11 +70,12 @@ def make_mlp_model():
     return Model(name="bench-mlp", init=init, loss=loss)
 
 
-def make_fed(fused: bool, server_opt: str = SERVER_OPT) -> FedConfig:
+def make_fed(fused: bool, server_opt: str = SERVER_OPT,
+             strategy: str = "vmap") -> FedConfig:
     return FedConfig(algorithm="uga", meta=True, cohort=COHORT,
                      local_steps=LOCAL_STEPS, client_lr=0.05, server_lr=0.1,
                      meta_lr=0.05, server_opt=server_opt, clip_norm=CLIP,
-                     fused_update=fused)
+                     cohort_strategy=strategy, fused_update=fused)
 
 
 def gen_rounds(n: int, seed: int = 0):
@@ -85,9 +92,9 @@ def gen_rounds(n: int, seed: int = 0):
     return batches, metas, wts
 
 
-def run_legacy(model, rounds: int):
+def run_legacy(model, rounds: int, strategy: str = "vmap"):
     """One dispatch + one host metric sync per round (the old driver)."""
-    fed = make_fed(fused=False)
+    fed = make_fed(fused=False, strategy=strategy)
     rf = jax.jit(make_federated_round(model, fed), donate_argnums=(0,))
     key = jax.random.PRNGKey(0)
     batches, metas, wts = gen_rounds(rounds)
@@ -104,10 +111,10 @@ def run_legacy(model, rounds: int):
     return rounds / (time.perf_counter() - t0)
 
 
-def run_fused_scanned(model, rounds: int):
+def run_fused_scanned(model, rounds: int, strategy: str = "vmap"):
     """Fused server step, K rounds per dispatch, one sync per chunk."""
     assert rounds % ROUNDS_PER_CALL == 0
-    fed = make_fed(fused=True)
+    fed = make_fed(fused=True, strategy=strategy)
     rf = RoundFnCache(model, fed)(ROUNDS_PER_CALL)
     key = jax.random.PRNGKey(0)
     batches, metas, wts = gen_rounds(rounds)
@@ -128,7 +135,8 @@ def run_fused_scanned(model, rounds: int):
     return rounds / (time.perf_counter() - t0)
 
 
-def numerics_agreement(model, server_opt: str, rounds: int = 1) -> float:
+def numerics_agreement(model, server_opt: str, rounds: int = 1,
+                       strategy: str = "vmap") -> float:
     """Max relative param error, fused vs legacy, after ``rounds`` rounds
     of the full pipeline (aggregate -> clip -> ``server_opt`` -> meta).
 
@@ -143,7 +151,7 @@ def numerics_agreement(model, server_opt: str, rounds: int = 1) -> float:
     batches, metas, wts = gen_rounds(rounds, seed=7)
     params = {}
     for fused in (False, True):
-        fed = make_fed(fused, server_opt)
+        fed = make_fed(fused, server_opt, strategy)
         rf = jax.jit(make_federated_round(model, fed))
         state = init_server_state(model, fed, key)
         for r in range(rounds):
@@ -156,7 +164,8 @@ def numerics_agreement(model, server_opt: str, rounds: int = 1) -> float:
                         jax.tree.leaves(params[False])))
 
 
-def metrics_agreement(model, server_opt: str = SERVER_OPT) -> float:
+def metrics_agreement(model, server_opt: str = SERVER_OPT,
+                      strategy: str = "vmap") -> float:
     """Max relative round-metric (client_loss/grad_norm/meta_loss) diff,
     fused vs legacy, one fresh round of the *benchmarked* configuration.
     The metrics are smooth in the parameters, so this gates the timed
@@ -165,7 +174,7 @@ def metrics_agreement(model, server_opt: str = SERVER_OPT) -> float:
     batches, metas, wts = gen_rounds(1, seed=7)
     out = {}
     for fused in (False, True):
-        fed = make_fed(fused, server_opt)
+        fed = make_fed(fused, server_opt, strategy)
         rf = jax.jit(make_federated_round(model, fed))
         state = init_server_state(model, fed, key)
         _, out[fused] = rf(state, batches[0], metas[0], wts, key)
@@ -262,6 +271,18 @@ def main():
     hg_fused, hg_legacy, hg_rel = run_hypergrad(
         model, iters=rounds * 2)
 
+    # scan strategy (client-sequential): streaming flat-buffer accumulation
+    # + scanned driver vs the legacy pytree-carry scan + per-round dispatch
+    scan_rounds = max(rounds // 2, ROUNDS_PER_CALL)
+    scan_rounds -= scan_rounds % ROUNDS_PER_CALL
+    rps_scan_legacy = run_legacy(model, scan_rounds, strategy="scan")
+    rps_scan_fused = run_fused_scanned(model, scan_rounds, strategy="scan")
+    scan_speedup = rps_scan_fused / rps_scan_legacy
+    scan_rel_err = max(numerics_agreement(model, "sgd", strategy="scan"),
+                       numerics_agreement(model, "sgdm", strategy="scan"),
+                       metrics_agreement(model, SERVER_OPT,
+                                         strategy="scan"))
+
     report = {
         "benchmark": "round_latency",
         "config": {"model": f"mlp {D}x{H}x{CLASSES}", "cohort": COHORT,
@@ -286,6 +307,19 @@ def main():
             "hypergrads_per_s_legacy_autodiff": round(hg_legacy, 2),
             "relative": round(hg_fused / hg_legacy, 3),
             "hypergrad_max_rel_err": hg_rel,
+        },
+        # client-sequential strategy: the scan carry is the flat dtype-group
+        # buffers (K streaming Pallas FMAs + clip/opt/write) vs the legacy
+        # pytree carry; the aggregates are bit-identical (tested), so the
+        # numerics gate mirrors the vmap one (smooth opts + adam metrics)
+        "scan_strategy": {
+            "rounds": scan_rounds,
+            "legacy": {"rounds_per_s": round(rps_scan_legacy, 2)},
+            "fused_scanned": {"rounds_per_s": round(rps_scan_fused, 2)},
+            "speedup": round(scan_speedup, 3),
+            "numerics_max_rel_err": scan_rel_err,
+            "pass_speedup_1p2x": bool(scan_speedup >= 1.2),
+            "pass_numerics_1e5": bool(scan_rel_err <= 1e-5),
         },
         "pass_speedup_1p5x": bool(speedup >= 1.5),
         "pass_numerics_1e5": bool(rel_err <= 1e-5),

@@ -246,7 +246,8 @@ class FedConfig:
                                         # the server step size, held in the
                                         # server state's 'ctrl' slot and
                                         # updated each round with ctrl_lr.
-                                        # Requires fused_update + vmap cohorts.
+                                        # Requires fused_update; vmap AND
+                                        # scan cohorts supported.
     ctrl_lr: float = 0.01               # hypergradient step size for the
                                         # controllable-weights state
                                         # (meta_mode='through_aggregation')
@@ -256,12 +257,26 @@ class FedConfig:
         assert self.cohort_strategy in ("vmap", "scan"), self.cohort_strategy
         assert self.local_steps >= 1
         assert self.local_epochs >= 1
-        assert self.meta_mode in ("post", "through_aggregation"), self.meta_mode
+        if self.meta_mode not in ("post", "through_aggregation"):
+            # ValueError, not assert: a typo'd mode under python -O would
+            # otherwise silently fall through to meta_mode='post' behavior
+            raise ValueError(
+                f"unknown meta_mode {self.meta_mode!r}; expected 'post' or "
+                "'through_aggregation'")
         if self.meta_mode == "through_aggregation":
-            assert self.fused_update, \
-                "through_aggregation differentiates the fused engine's " \
-                "custom VJP; set fused_update=True"
-            assert self.cohort_strategy == "vmap", \
-                "through_aggregation needs stacked per-client gradients " \
-                "(vmap cohorts); the scan carry has already aggregated"
-            assert self.server_lr > 0, "server_lr seeds exp(log_lr) > 0"
+            # ValueError (not assert): the combination must fail loudly in
+            # any interpreter mode — the legacy tree-map branch has no ctrl
+            # hypergradient path and would die on an undefined new_ctrl at
+            # trace time.  vmap AND scan cohorts are both supported (scan
+            # streams the per-client weight cotangents through the fused
+            # accumulate VJP).
+            if not self.fused_update:
+                raise ValueError(
+                    "meta_mode='through_aggregation' differentiates the "
+                    "fused engine's custom VJP; set fused_update=True or "
+                    "use meta_mode='post'")
+            if not self.server_lr > 0:
+                raise ValueError(
+                    "meta_mode='through_aggregation' seeds the controllable "
+                    "step size as exp(log_lr)=server_lr; server_lr must "
+                    "be > 0")

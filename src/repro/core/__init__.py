@@ -1,15 +1,19 @@
 """The paper's contribution: UGA (§3.1) + FedMeta (§3.2) as composable,
 model- and task-agnostic strategies over arbitrary JAX models."""
-from repro.core.aggregate import cohort_gradient, weighted_mean
+from repro.core.aggregate import (cohort_gradient, scan_cohort_gradient_flat,
+                                  weighted_mean)
 from repro.core.client import (fedavg_update, make_client_update, uga_update)
-from repro.core.meta import meta_update, meta_update_through_aggregation
+from repro.core.meta import (meta_update, meta_update_through_aggregation,
+                             meta_update_through_aggregation_scan)
 from repro.core.round import (init_server_state, make_federated_round,
                               grad_global_norm, resolve_server_lr,
                               RoundFnCache, stack_round_inputs)
 from repro.core import server_opt
 
-__all__ = ["cohort_gradient", "weighted_mean", "fedavg_update", "uga_update",
+__all__ = ["cohort_gradient", "scan_cohort_gradient_flat", "weighted_mean",
+           "fedavg_update", "uga_update",
            "make_client_update", "meta_update",
-           "meta_update_through_aggregation", "init_server_state",
+           "meta_update_through_aggregation",
+           "meta_update_through_aggregation_scan", "init_server_state",
            "make_federated_round", "grad_global_norm", "resolve_server_lr",
            "server_opt", "RoundFnCache", "stack_round_inputs"]

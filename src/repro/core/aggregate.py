@@ -6,7 +6,12 @@ execution strategies:
     at once (right for <~1B learners);
   * ``scan`` (client-sequential): clients run one at a time and the weighted
     gradient accumulates in the carry — one trajectory alive at a time over
-    FSDP-sharded parameters (right for 90B/398B learners).
+    FSDP-sharded parameters (right for 90B/398B learners).  The fused
+    engine's form is :func:`scan_cohort_gradient_flat`, whose carry is the
+    flat-buffer layout of ``repro.core.flat`` and whose accumulate is the
+    Pallas streaming FMA (``kernels/fused_update``) — no pytree-carry
+    tree-maps, and its custom VJP yields per-client weight hypergradients
+    (``meta_mode="through_aggregation"`` under scan cohorts).
 
 Both produce bit-identical math (property-tested).  Under pjit, the cohort
 axis of ``cohort_batch`` is sharded over the mesh (data, pod) axes so the
@@ -77,8 +82,8 @@ def cohort_gradient(client_update: Callable, w_t: PyTree, cohort_batch: PyTree,
             raise NotImplementedError(
                 "stacked gradients defeat the point of the scan strategy "
                 "(one client trajectory alive at a time); the fused engine "
-                "feeds the scan-accumulated G through its clip+apply pass "
-                "instead — see ROADMAP 'scan-strategy cohort fusion'")
+                "streams the accumulation instead — use "
+                "scan_cohort_gradient_flat")
         wsum = jnp.maximum(jnp.sum(client_weights.astype(jnp.float32)), 1e-30)
 
         def body(carry, inp):
@@ -100,3 +105,66 @@ def cohort_gradient(client_update: Callable, w_t: PyTree, cohort_batch: PyTree,
         return G, mean_loss
 
     raise ValueError(strategy)
+
+
+def scan_cohort_gradient_flat(client_update: Callable, w_t: PyTree,
+                              cohort_batch: PyTree,
+                              client_weights: jax.Array, lr, rng, *,
+                              spec, loss_weights: Optional[jax.Array] = None,
+                              use_ref: bool = False,
+                              interpret: Optional[bool] = None
+                              ) -> Tuple[list, jax.Array]:
+    """Client-sequential cohort execution fused into the flat-buffer engine.
+
+    The scan carry IS the fused engine's per-dtype-group ``(rows, LANES)``
+    fp32 buffers: each step runs one client's local update, flattens its
+    gradient (:func:`repro.core.flat.flatten_tree` — one client in flat
+    form at a time), and FMAs it into the accumulators with the Pallas
+    ``accumulate_pass`` kernel — one HBM sweep per client, no pytree-carry
+    tree-maps, no flatten round-trip of the aggregate.  Same per-client rng
+    split and fp32 accumulation order as ``cohort_gradient(strategy=
+    "scan")``, so results are bit-compatible with the legacy carry.
+
+    Differentiable w.r.t. ``client_weights``: the accumulate custom VJP
+    emits dw_k = <g_k, dG> with g_k recomputed under ``jax.checkpoint``
+    (one client trajectory's residuals alive at a time) — exactly the
+    ``meta_mode="through_aggregation"`` hypergradient.
+
+    Returns (G_groups, mean_loss): the Eq. (14) weighted-mean flat buffers
+    (list, one per dtype group of ``spec``) plus the weighted mean client
+    loss.  Feed G_groups to ``fused_apply_flat`` for clip+optimizer+write.
+    ``loss_weights`` (default: ``client_weights``) weights the loss metric
+    separately from the aggregation — through_aggregation aggregates with
+    the controllable eff_w but reports the n_k-weighted loss so the metric
+    means the same thing on every strategy.
+    """
+    from repro.core import flat as flat_mod           # lazy: import cycle
+    from repro.kernels.fused_update.ops import flat_accumulate
+
+    cohort = client_weights.shape[0]
+    rngs = (jax.random.split(rng, cohort) if rng is not None
+            else jnp.zeros((cohort, 2), jnp.uint32))
+    w32 = client_weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w32), 1e-30)
+    lw32 = (w32 if loss_weights is None
+            else loss_weights.astype(jnp.float32))
+    lwsum = (wsum if loss_weights is None
+             else jnp.maximum(jnp.sum(lw32), 1e-30))
+    accum = flat_accumulate(use_ref, interpret)
+
+    def body(carry, inp):
+        accs, l_acc = carry
+        batch, weight, lweight, r = inp
+        g_k, l_k = client_update(
+            w_t, batch, lr, r if rng is not None else None)
+        wk = weight / wsum
+        g_bufs = flat_mod.flatten_tree(spec, g_k)
+        accs = tuple(accum(a, g, wk) for a, g in zip(accs, g_bufs))
+        return (accs, l_acc + (lweight / lwsum) * l_k), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    acc0 = tuple(flat_mod.zeros_flat(spec))
+    (G, mean_loss), _ = lax.scan(
+        body, (acc0, jnp.zeros((), jnp.float32)),
+        (cohort_batch, w32, lw32, rngs))
+    return list(G), mean_loss

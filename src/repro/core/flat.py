@@ -91,7 +91,12 @@ def _pack(parts: Sequence[jax.Array], size: int, rows: int,
 
 
 def flatten_tree(spec: FlatSpec, tree: PyTree) -> List[jax.Array]:
-    """tree -> one (rows, LANES) fp32 buffer per dtype group."""
+    """tree -> one (rows, LANES) fp32 buffer per dtype group.
+
+    Also the *per-client streaming* flatten of the scan cohort strategy:
+    called once per client inside the cohort scan, so only ONE client's
+    gradient is ever in flat form — the (cohort, rows, LANES) stack of
+    :func:`flatten_stacked` never materializes."""
     leaves = jax.tree.leaves(tree)
     out = []
     for g in spec.groups:
@@ -144,5 +149,15 @@ def unflatten_stacked(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
 
 
 def zeros_flat(spec: FlatSpec) -> List[jax.Array]:
-    """Zero fp32 buffers in the spec's layout (optimizer state slots)."""
+    """Zero fp32 buffers in the spec's layout (optimizer state slots and
+    the scan strategy's streaming accumulator carry)."""
     return [jnp.zeros((g.rows, LANES), jnp.float32) for g in spec.groups]
+
+
+def flat_sq_norm(bufs: Sequence[jax.Array]) -> jax.Array:
+    """||tree||^2 over flat group buffers.  The zero pad contributes
+    nothing, so this equals the per-leaf sum of squares exactly."""
+    ssq = jnp.float32(0.0)
+    for b in bufs:
+        ssq = ssq + jnp.sum(b * b)
+    return ssq

@@ -12,13 +12,16 @@ Two server-step engines (``fed.fused_update``):
   * legacy (False) — tree-map stages: ``weighted_mean`` -> clip-norm scale
     -> fp32 cast -> ``server_opt.apply`` — 5+ full-model traversals.
   * fused (True) — the flat-buffer Pallas engine
-    (``repro.kernels.fused_update``): cohort reduce + ||G||^2 in one HBM
-    pass, clip + optimizer + param write in a second.
+    (``repro.kernels.fused_update``): vmap cohorts reduce + ||G||^2 in one
+    HBM pass over the gradient stack; scan cohorts stream the reduce as one
+    FMA sweep per client (the scan carry IS the flat buffers); both finish
+    with the clip + optimizer + param write pass.
 
 ``fed.meta_mode`` picks the FedMeta step: ``"post"`` (Eq. 20 parameter
 step after aggregation, default) or ``"through_aggregation"`` (fused engine
-only: hypergradients of the D_meta loss through the server step update a
-controllable per-client-weights + server-lr state — see ``core/meta.py``).
+only, vmap or scan cohorts: hypergradients of the D_meta loss through the
+server step update a controllable per-client-weights + server-lr state —
+see ``core/meta.py``).
 
 ``rounds_per_call=K`` wraps the round body in ``lax.scan`` so drivers
 compile K rounds into ONE donated program and sync metrics to host once per
@@ -37,11 +40,13 @@ from jax import lax
 
 from repro.configs.base import FedConfig
 from repro.core import server_opt
-from repro.core.aggregate import cohort_gradient
+from repro.core.aggregate import cohort_gradient, scan_cohort_gradient_flat
 from repro.core.client import make_client_update
 from repro.core.flat import make_flat_spec
-from repro.core.meta import meta_update, meta_update_through_aggregation
-from repro.kernels.fused_update.ops import (fused_server_update,
+from repro.core.meta import (meta_update, meta_update_through_aggregation,
+                             meta_update_through_aggregation_scan)
+from repro.kernels.fused_update.ops import (fused_apply_flat,
+                                            fused_server_update,
                                             init_flat_opt_state)
 from repro.models.model import Model
 
@@ -101,10 +106,24 @@ def make_federated_round(model: Model, fed: FedConfig, *,
     agg_dtype = jnp.dtype(fed.grad_agg_dtype)
     server_lr = resolve_server_lr(fed)
     through_agg = fed.meta and fed.meta_mode == "through_aggregation"
-    if through_agg:
-        assert grad_shardings is None, \
-            "through_aggregation needs the stacked fused path; " \
-            "sharded cohorts pre-aggregate per leaf"
+    if through_agg and not fed.fused_update:
+        # FedConfig validates this too, but guard here for configs built
+        # around __post_init__ (python -O, object.__setattr__): the legacy
+        # tree-map branch has no ctrl hypergradient path, so tracing would
+        # die on an undefined new_ctrl.
+        raise ValueError(
+            "meta_mode='through_aggregation' requires fused_update=True: "
+            "the hypergradients flow through the fused engine's custom "
+            "VJP; the legacy tree-map server step cannot update the "
+            "'ctrl' slot. Set FedConfig(fused_update=True) or use "
+            "meta_mode='post'.")
+    if through_agg and grad_shardings is not None:
+        raise ValueError(
+            "meta_mode='through_aggregation' is unsupported with "
+            "grad_shardings: sharded cohorts pre-aggregate per leaf, so "
+            "per-client weight hypergradients are unavailable. Drop "
+            "grad_shardings (vmap/scan cohorts both support "
+            "through_aggregation) or use meta_mode='post'.")
 
     def one_round(state: PyTree, cohort_batch: PyTree, meta_batch: PyTree,
                   client_weights: jax.Array, rng: jax.Array
@@ -116,44 +135,72 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         rng_c, rng_m = jax.random.split(rng)
 
         if fed.fused_update:
-            if fed.cohort_strategy == "vmap" and grad_shardings is None:
-                g_stack, client_loss = cohort_gradient(
-                    client_update, params, cohort_batch, client_weights,
-                    lr_c, rng_c, strategy="vmap", agg_dtype=agg_dtype,
-                    spmd_axis_name=spmd_axis_name, aggregate=False)
-                w_fused = client_weights
+            meta_metrics = {}
+            if fed.cohort_strategy == "scan" and grad_shardings is None:
+                # Client-sequential cohort fusion: the scan carry is the
+                # flat (rows, LANES) fp32 dtype-group buffers themselves —
+                # K streaming Pallas FMAs (one per client), then the same
+                # clip+optimizer+write pass.  No pytree-carry tree-maps,
+                # no flatten round-trip of the aggregate.
+                if through_agg:
+                    (new_params, opt_state, gn_post, client_loss,
+                     new_ctrl, meta_metrics) = \
+                        meta_update_through_aggregation_scan(
+                            model.loss, client_update, params, cohort_batch,
+                            client_weights, lr_c, rng_c, state["opt"],
+                            meta_batch, state["ctrl"], opt=fed.server_opt,
+                            clip_norm=fed.clip_norm,
+                            momentum=fed.server_momentum,
+                            ctrl_lr=fed.ctrl_lr, rng=rng_m)
+                else:
+                    spec = make_flat_spec(params)
+                    G_groups, client_loss = scan_cohort_gradient_flat(
+                        client_update, params, cohort_batch, client_weights,
+                        lr_c, rng_c, spec=spec)
+                    new_params, opt_state, gn_post = fused_apply_flat(
+                        params, G_groups, state["opt"], opt=fed.server_opt,
+                        lr=server_lr, clip_norm=fed.clip_norm,
+                        momentum=fed.server_momentum, spec=spec)
             else:
-                # Sharded cohorts (grad_shardings) keep the per-leaf
-                # weighted mean so its sharding constraints stay attached —
-                # the flat stack can't express them yet and GSPMD would
-                # all-gather the (cohort, *model) stack (the 37x HBM
-                # blow-up).  The scan strategy aggregates in its carry (one
-                # trajectory alive at a time).  Either way the fused engine
-                # still does clip+optimizer+write over the result; fusing
-                # the reduce itself is a ROADMAP follow-on.
-                G, client_loss = cohort_gradient(
-                    client_update, params, cohort_batch, client_weights,
-                    lr_c, rng_c, strategy=fed.cohort_strategy,
-                    agg_dtype=agg_dtype, spmd_axis_name=spmd_axis_name,
-                    grad_shardings=grad_shardings)
-                g_stack = jax.tree.map(lambda x: x[None], G)
-                w_fused = jnp.ones((1,), jnp.float32)
-            if through_agg:
-                new_params, opt_state, gn_post, new_ctrl, meta_metrics = \
-                    meta_update_through_aggregation(
-                        model.loss, params, g_stack, w_fused, state["opt"],
-                        meta_batch, state["ctrl"], opt=fed.server_opt,
+                if fed.cohort_strategy == "vmap" and grad_shardings is None:
+                    g_stack, client_loss = cohort_gradient(
+                        client_update, params, cohort_batch, client_weights,
+                        lr_c, rng_c, strategy="vmap", agg_dtype=agg_dtype,
+                        spmd_axis_name=spmd_axis_name, aggregate=False)
+                    w_fused = client_weights
+                else:
+                    # Sharded cohorts (grad_shardings) keep the per-leaf
+                    # weighted mean so its sharding constraints stay
+                    # attached — the flat stack can't express them yet and
+                    # GSPMD would all-gather the (cohort, *model) stack
+                    # (the 37x HBM blow-up).  The fused engine still does
+                    # clip+optimizer+write over the result.
+                    G, client_loss = cohort_gradient(
+                        client_update, params, cohort_batch, client_weights,
+                        lr_c, rng_c, strategy=fed.cohort_strategy,
+                        agg_dtype=agg_dtype, spmd_axis_name=spmd_axis_name,
+                        grad_shardings=grad_shardings)
+                    g_stack = jax.tree.map(lambda x: x[None], G)
+                    w_fused = jnp.ones((1,), jnp.float32)
+                if through_agg:
+                    new_params, opt_state, gn_post, new_ctrl, meta_metrics \
+                        = meta_update_through_aggregation(
+                            model.loss, params, g_stack, w_fused,
+                            state["opt"], meta_batch, state["ctrl"],
+                            opt=fed.server_opt, clip_norm=fed.clip_norm,
+                            momentum=fed.server_momentum,
+                            ctrl_lr=fed.ctrl_lr, rng=rng_m)
+                else:
+                    new_params, opt_state, gn_post = fused_server_update(
+                        params, g_stack, w_fused, state["opt"],
+                        opt=fed.server_opt, lr=server_lr,
                         clip_norm=fed.clip_norm,
-                        momentum=fed.server_momentum, ctrl_lr=fed.ctrl_lr,
-                        rng=rng_m)
-                metrics = {"client_loss": client_loss, "grad_norm": gn_post,
-                           **meta_metrics}
-            else:
-                new_params, opt_state, gn_post = fused_server_update(
-                    params, g_stack, w_fused, state["opt"],
-                    opt=fed.server_opt, lr=server_lr,
-                    clip_norm=fed.clip_norm, momentum=fed.server_momentum)
-                metrics = {"client_loss": client_loss, "grad_norm": gn_post}
+                        momentum=fed.server_momentum)
+            # one metrics assembly for every fused arm: rounds_per_call
+            # chunking (lax.scan) needs identical keys per config, so the
+            # strategy/mode branches must not each grow their own dict
+            metrics = {"client_loss": client_loss, "grad_norm": gn_post,
+                       **meta_metrics}
         else:
             G, client_loss = cohort_gradient(
                 client_update, params, cohort_batch, client_weights, lr_c,

@@ -42,11 +42,20 @@ class FederatedData:
         clients = rng.choice(self.num_clients, size=cohort, replace=False)
         batches, weights = [], []
         n_share = int(batch * share_fraction) if share else 0
+        if n_share and self.shared_indices is None:
+            # Without this, the share slice is silently skipped and every
+            # client batch comes back batch - n_share examples short — a
+            # shape mismatch (or quietly smaller batches) far downstream.
+            raise ValueError(
+                f"sample_round(share=True) with share_fraction="
+                f"{share_fraction} needs a FedShare global set, but "
+                "FederatedData.shared_indices is None; configure "
+                "shared_indices or call with share=False")
         for c in clients:
             idx = self.client_indices[c]
             take = rng.choice(idx, size=batch - n_share,
                               replace=idx.size < batch - n_share)
-            if n_share and self.shared_indices is not None:
+            if n_share:
                 sh = rng.choice(self.shared_indices, size=n_share,
                                 replace=self.shared_indices.size < n_share)
                 take = np.concatenate([take, sh])

@@ -15,7 +15,16 @@ Two forward kernels, at most two passes over HBM per round:
     scalars (clip scale, lr, bias corrections) ride in a (1, 4) SMEM
     operand; static hyper-parameters (momentum, b1, b2, eps) are baked in.
 
-Two backward kernels give the pair a hand-written VJP (wired up by the
+A third forward kernel serves the client-sequential (scan) cohort
+strategy, where the per-client gradients are never stacked:
+
+  * :func:`accumulate_pass` — fused-multiply-add of ONE client's flattened
+    gradient into the group accumulator, ``acc + w_k * g_k``, in a single
+    HBM sweep.  The scan carry is the flat buffer itself, so a scan round
+    is K streaming accumulates plus the same :func:`update_pass` — no
+    pytree-carry tree-maps, no flatten round-trip of the aggregate.
+
+Backward kernels give each pair a hand-written VJP (wired up by the
 ``jax.custom_vjp`` ops in ``ops.py``) so meta-learning *through* the
 aggregation never falls back to XLA re-differentiating the engine:
 
@@ -24,6 +33,14 @@ aggregation never falls back to XLA re-differentiating the engine:
     (``dg_k = w_k * dGt``) and accumulates the per-client weight cotangents
     ``dw_k = <g_k, dGt>`` into a (cohort, 1) output revisited by every grid
     step.
+  * :func:`accumulate_pass_bwd` — for the streaming FMA: ``d_acc`` is the
+    identity (handled by the caller), ``dg_k = w_k * d_out`` and
+    ``dw_k = <g_k, d_out>`` accumulated into a (1, 1) output.  Because the
+    accumulator cotangent passes through later scan steps unchanged,
+    ``d_out`` at step k IS the cotangent of the final aggregate, so
+    ``dw_k = <g_k, dG>`` — exactly the through-aggregation hypergradient
+    (g_k is recomputed under ``jax.checkpoint`` by the surrounding scan,
+    one client trajectory alive at a time).
   * :func:`update_pass_bwd` — replays the optimizer recurrence from the
     saved (G, m, v, scalars) residuals and pushes the output cotangents
     (d new_p, d new_m, d new_v) back into gradient / opt-state cotangents
@@ -33,7 +50,7 @@ aggregation never falls back to XLA re-differentiating the engine:
     is zero-guarded so the zero-padded tail rows of the flat layout produce
     exact zeros instead of ``0 * inf`` NaNs.
 
-All four kernels run on CPU with ``interpret=True`` (how the tier-1 suite
+All kernels run on CPU with ``interpret=True`` (how the tier-1 suite
 validates them) and lower through Mosaic on TPU unchanged.
 """
 from __future__ import annotations
@@ -63,6 +80,15 @@ def _block_rows(rows: int, target: int = 256) -> int:
     while rows % br:
         br //= 2
     return max(br, 1)
+
+
+def _scalar_spec(cols: int, interpret: bool):
+    """(1, cols) scalar-operand placement: SMEM on real TPUs, default
+    memory in interpret mode (where pltpu may be unavailable)."""
+    if pltpu is not None and not interpret:
+        return pl.BlockSpec((1, cols), lambda i: (0, 0),
+                            memory_space=pltpu.SMEM)
+    return pl.BlockSpec((1, cols), lambda i: (0, 0))
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +134,72 @@ def aggregate_pass(g_stack: jax.Array, w_norm: jax.Array, *,
         interpret=interpret,
     )(w_norm.astype(jnp.float32).reshape(cohort, 1), g_stack)
     return G, ssq[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming pass (scan strategy): acc <- acc + w_k * g_k in one HBM sweep
+# ---------------------------------------------------------------------------
+def _accumulate_kernel(w_ref, acc_ref, g_ref, out_ref):
+    out_ref[...] = acc_ref[...] + w_ref[0, 0] * g_ref[...]
+
+
+def accumulate_pass(acc: jax.Array, g: jax.Array, w, *,
+                    block_rows: int = 256, interpret: bool = False
+                    ) -> jax.Array:
+    """acc/g: (rows, LANES) fp32; w: scalar normalized client weight.
+    Returns ``acc + w * g`` — the per-client streaming Eq. (14) term the
+    scan strategy carries instead of a pytree."""
+    rows, lanes = acc.shape
+    assert lanes == LANES, acc.shape
+    br = _block_rows(rows, block_rows)
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    w_spec = _scalar_spec(1, interpret)
+    out = pl.pallas_call(
+        _accumulate_kernel,
+        grid=(rows // br,),
+        in_specs=[w_spec, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(w, jnp.float32).reshape(1, 1), acc, g)
+    return out
+
+
+def _accumulate_bwd_kernel(w_ref, g_ref, dout_ref, dg_ref, dw_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[0, 0] = jnp.float32(0.0)
+
+    dout = dout_ref[...]
+    dg_ref[...] = w_ref[0, 0] * dout                  # dg_k = w_k d_out
+    dw_ref[0, 0] += jnp.sum(g_ref[...] * dout)        # dw_k = <g_k, d_out>
+
+
+def accumulate_pass_bwd(g: jax.Array, w, d_out: jax.Array, *,
+                        block_rows: int = 256, interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """VJP of :func:`accumulate_pass` w.r.t. (g, w); the accumulator
+    cotangent is the identity and handled by the caller.  Returns
+    (dg (rows, LANES), dw ())."""
+    rows, lanes = g.shape
+    assert lanes == LANES, g.shape
+    br = _block_rows(rows, block_rows)
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    w_spec = _scalar_spec(1, interpret)
+    dg, dw = pl.pallas_call(
+        _accumulate_bwd_kernel,
+        grid=(rows // br,),
+        in_specs=[w_spec, tile, tile],
+        out_specs=[tile, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(w, jnp.float32).reshape(1, 1), g, d_out)
+    return dg, dw[0, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -159,10 +251,7 @@ def update_pass(G: jax.Array, p: jax.Array, m: Optional[jax.Array],
     assert lanes == LANES, G.shape
     br = _block_rows(rows, block_rows)
     tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
-    scal_spec = (pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0),
-                              memory_space=pltpu.SMEM)
-                 if pltpu is not None and not interpret
-                 else pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0)))
+    scal_spec = _scalar_spec(N_SCALARS, interpret)
     buf = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
 
     state_in = {"sgd": [], "sgdm": [m], "adam": [m, v], "yogi": [m, v]}[opt]
@@ -334,10 +423,7 @@ def update_pass_bwd(G: jax.Array, m: Optional[jax.Array],
     tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
     # same SMEM placement as the forward's scalar operand; the (1, 4)
     # cotangent OUTPUT stays in VMEM like the forward's (1, 1) ssq
-    scal_in = (pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0),
-                            memory_space=pltpu.SMEM)
-               if pltpu is not None and not interpret
-               else pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0)))
+    scal_in = _scalar_spec(N_SCALARS, interpret)
     scal_out = pl.BlockSpec((1, N_SCALARS), lambda i: (0, 0))
     buf = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
     scal_buf = jax.ShapeDtypeStruct((1, N_SCALARS), jnp.float32)

@@ -8,6 +8,13 @@ buffers (layout: ``repro.core.flat``):
   pass 1  kernels.aggregate_pass   cohort-weighted mean + ||G||^2
   pass 2  kernels.update_pass      clip scale + sgd/sgdm/adam/yogi + write
 
+The client-sequential (scan) strategy streams pass 1 instead: the cohort
+scan carries the flat group buffers and FMAs each client's flattened
+gradient into them with :func:`flat_accumulate`
+(``kernels.accumulate_pass``), then :func:`fused_apply_flat` runs pass 2
+on the result — same engine, no stacked (cohort, rows, LANES) tensor ever
+materializes.
+
 Numerics match ``repro.core.server_opt.apply`` on the clipped fp32 mean to
 <= 1e-5 relative (tested against both the pure-jnp ``ref`` oracle and the
 legacy tree-map path).  ``use_ref=True`` swaps the Pallas kernels for the
@@ -89,6 +96,45 @@ def _agg_vjp(use_ref: bool, interpret: bool):
 
 
 @functools.lru_cache(maxsize=None)
+def _acc_vjp(use_ref: bool, interpret: bool):
+    """custom_vjp over the streaming accumulate: (acc, g, w) -> acc + w*g.
+
+    The scan strategy carries the flat group buffers and calls this once
+    per client per group.  The backward is (d_acc, w*d_out, <g, d_out>) —
+    the accumulator cotangent is the identity, so the cotangent arriving at
+    step k is the cotangent of the FINAL aggregate, making dw_k = <g_k, dG>
+    the through-aggregation weight hypergradient."""
+
+    @jax.custom_vjp
+    def accum(acc, g, w):
+        if use_ref:
+            return R.accumulate_ref(acc, g, w)
+        return K.accumulate_pass(acc, g, w, interpret=interpret)
+
+    def fwd(acc, g, w):
+        return accum(acc, g, w), (g, w)
+
+    def bwd(res, d_out):
+        g, w = res
+        if use_ref:
+            dg, dw = R.accumulate_bwd_ref(g, w, d_out)
+        else:
+            dg, dw = K.accumulate_pass_bwd(g, w, d_out, interpret=interpret)
+        return d_out, dg, dw
+
+    accum.defvjp(fwd, bwd)
+    return accum
+
+
+def flat_accumulate(use_ref: bool = False, interpret: Optional[bool] = None):
+    """Public getter for the cached streaming-accumulate custom VJP
+    (``(acc, g, w) -> acc + w*g`` over one (rows, LANES) fp32 group)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _acc_vjp(use_ref, interpret)
+
+
+@functools.lru_cache(maxsize=None)
 def _upd_vjp(opt: str, momentum: float, b1: float, b2: float, eps: float,
              use_ref: bool, interpret: bool):
     """custom_vjp over the update pass:
@@ -152,9 +198,7 @@ def fused_server_update(params: PyTree, grad_stack: PyTree,
     w = w / jnp.maximum(jnp.sum(w), 1e-30)
 
     g_groups = flat_mod.flatten_stacked(spec, grad_stack)
-    p_groups = flat_mod.flatten_tree(spec, params)
     agg = _agg_vjp(use_ref, interpret)
-    upd = _upd_vjp(opt, momentum, b1, b2, eps, use_ref, interpret)
 
     # ---- pass 1: weighted reduce + sum-of-squares per dtype group --------
     Gs, ssq = [], jnp.float32(0.0)
@@ -162,14 +206,55 @@ def fused_server_update(params: PyTree, grad_stack: PyTree,
         G, s = agg(g_stack, w)
         Gs.append(G)
         ssq = ssq + s
-    gn = jnp.sqrt(ssq)
+
+    return _apply_groups(spec, Gs, jnp.sqrt(ssq), params, opt_state,
+                         opt=opt, lr=lr, clip_norm=clip_norm,
+                         momentum=momentum, b1=b1, b2=b2, eps=eps,
+                         use_ref=use_ref, interpret=interpret)
+
+
+def fused_apply_flat(params: PyTree, G_groups, opt_state: PyTree, *,
+                     opt: str = "sgd", lr, clip_norm: float = 0.0,
+                     momentum: float = 0.9, b1: float = 0.9,
+                     b2: float = 0.99, eps: float = 1e-8,
+                     spec: Optional[FlatSpec] = None,
+                     use_ref: bool = False,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[PyTree, PyTree, jax.Array]:
+    """The clip+optimizer+write half of the engine over ALREADY-aggregated
+    flat buffers — the scan strategy's entry point, where pass 1 happened
+    as K streaming :func:`flat_accumulate` FMAs inside the cohort scan.
+
+    G_groups: one (rows, LANES) fp32 buffer per dtype group of ``spec``
+    holding the Eq. (14) weighted mean.  ||G||^2 is reduced here with plain
+    jnp (one extra flat read; its VJP is the trivial 2G so no kernel is
+    warranted).  Returns (new_params, new_opt_state, grad_norm_after_clip)
+    exactly like :func:`fused_server_update`."""
+    if spec is None:
+        spec = make_flat_spec(params)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    gn = jnp.sqrt(flat_mod.flat_sq_norm(G_groups))
+    return _apply_groups(spec, list(G_groups), gn, params,
+                         opt_state, opt=opt, lr=lr, clip_norm=clip_norm,
+                         momentum=momentum, b1=b1, b2=b2, eps=eps,
+                         use_ref=use_ref, interpret=interpret)
+
+
+def _apply_groups(spec: FlatSpec, Gs, gn, params: PyTree, opt_state: PyTree,
+                  *, opt: str, lr, clip_norm: float, momentum: float,
+                  b1: float, b2: float, eps: float, use_ref: bool,
+                  interpret: bool) -> Tuple[PyTree, PyTree, jax.Array]:
+    """Shared pass 2: clip scale + optimizer + param write over the flat
+    dtype groups.  ``gn`` is the pre-clip global gradient norm."""
+    upd = _upd_vjp(opt, momentum, b1, b2, eps, use_ref, interpret)
+    p_groups = flat_mod.flatten_tree(spec, params)
 
     if clip_norm > 0:
         scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
     else:
         scale = jnp.float32(1.0)
 
-    # ---- pass 2: clip + optimizer + param write per dtype group ----------
     if opt in ("adam", "yogi"):
         t = opt_state["t"] + 1
         tf = t.astype(jnp.float32)

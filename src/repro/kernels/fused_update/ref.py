@@ -6,6 +6,9 @@ two-pass structure of the Pallas kernels:
   pass 1  (aggregate):  G = sum_k w_k g_k   and   ssq = ||G||^2
   pass 2  (apply):      d = optimizer(G * scale);  p <- p - lr * d
 
+plus the scan strategy's streaming form of pass 1 (:func:`accumulate_ref`:
+``acc + w_k g_k``, one client at a time).
+
 The per-optimizer math mirrors ``repro.core.server_opt.apply`` line for
 line (fp32 throughout); bias corrections for adam/yogi arrive as the
 precomputed scalars bc1 = 1/(1-b1^t), bc2 = 1/(1-b2^t).
@@ -31,6 +34,20 @@ def aggregate_ref(g_stack: jax.Array, w_norm: jax.Array
     Returns (G (rows, lanes) fp32, ssq scalar fp32)."""
     G = jnp.sum(g_stack * w_norm[:, None, None].astype(jnp.float32), axis=0)
     return G, jnp.sum(G * G)
+
+
+def accumulate_ref(acc: jax.Array, g: jax.Array, w) -> jax.Array:
+    """Streaming Eq. (14) term (scan strategy): ``acc + w * g`` over one
+    client's flat (rows, lanes) fp32 gradient buffer."""
+    return acc + jnp.asarray(w, jnp.float32) * g
+
+
+def accumulate_bwd_ref(g: jax.Array, w, d_out: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """VJP of :func:`accumulate_ref` w.r.t. (g, w); the accumulator
+    cotangent is the identity and handled by the caller.
+    dg = w d_out, dw = <g, d_out>."""
+    return jnp.asarray(w, jnp.float32) * d_out, jnp.sum(g * d_out)
 
 
 def update_ref(G: jax.Array, p: jax.Array, m: Optional[jax.Array],

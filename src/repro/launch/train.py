@@ -104,7 +104,13 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         samples = [data.sample_round(r + j, cohort=cohort,
                                      batch=client_batch, share=share)
                    for j in range(k)]
-        metas = [data.sample_meta(r + j, batch=meta_bs) for j in range(k)]
+        # No FedMeta step -> no D_meta sampling: the round_fn never touches
+        # meta_batch when fed.meta is False, so ship None (an empty pytree
+        # threads through stack_round_inputs and jit untouched) instead of
+        # sampling+stacking host batches every round — and sample_meta
+        # would assert outright when no meta set exists.
+        metas = [data.sample_meta(r + j, batch=meta_bs) if fed.meta else None
+                 for j in range(k)]
         rngs = [jax.random.fold_in(key, r + j) for j in range(k)]
         if k == 1:
             state, metrics = get_round_fn(1)(

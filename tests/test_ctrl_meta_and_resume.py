@@ -4,6 +4,11 @@ threading, and full-server-state checkpoint/resume:
   * ``meta_mode="through_aggregation"`` hypergradients (w.r.t. per-client
     weight logits and log server lr) through the fused custom VJP match
     XLA autodiff through the legacy tree-map server step;
+  * the same hypergradients under ``cohort_strategy="scan"`` (streaming
+    flat accumulation, g_k recomputed under ``jax.checkpoint``) match the
+    vmap path <= 1e-5, and the combination runs under rounds_per_call>1;
+  * the mode-combination guards fail loudly (ValueError with the fix named)
+    instead of a bare NameError / silently-broadcast ctrl update;
   * one controllable round updates the ctrl state with finite metrics and
     leaves ``meta_mode="post"`` (the default) bit-identical to before;
   * ``server_lr`` regression: forced to 1.0 ONLY for fedavg/fedprox under
@@ -176,14 +181,147 @@ def test_meta_mode_post_default_unchanged(key):
 
 
 def test_through_aggregation_config_validation():
-    with pytest.raises(AssertionError):
+    # ValueError (not a bare assert): must stay loud under python -O, and
+    # the message should name the fix
+    with pytest.raises(ValueError, match="fused_update=True"):
         FedConfig(meta=True, meta_mode="through_aggregation",
                   fused_update=False)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="server_lr"):
         FedConfig(meta=True, meta_mode="through_aggregation",
-                  fused_update=True, cohort_strategy="scan")
-    with pytest.raises(AssertionError):
+                  fused_update=True, server_lr=0.0)
+    # scan cohorts are now a SUPPORTED combination (streaming flat
+    # accumulation feeds the per-client weight hypergradients)
+    FedConfig(meta=True, meta_mode="through_aggregation",
+              fused_update=True, cohort_strategy="scan")
+    with pytest.raises(ValueError, match="meta_mode"):
         FedConfig(meta_mode="sideways")
+
+
+def test_through_aggregation_round_guards():
+    """make_federated_round re-validates at trace-build time: a config that
+    dodged __post_init__ (python -O, object.__setattr__) must not reach the
+    legacy branch and die on an undefined new_ctrl; grad_shardings (which
+    pre-aggregates per leaf) has no per-client hypergradient and must be
+    rejected with an actionable message."""
+    model = make_mlp_model()
+    fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                    fused_update=True, meta_mode="through_aggregation")
+    object.__setattr__(fed, "fused_update", False)     # simulate -O bypass
+    with pytest.raises(ValueError, match="fused_update=True"):
+        make_federated_round(model, fed)
+
+    fed2 = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                     fused_update=True, meta_mode="through_aggregation")
+    with pytest.raises(ValueError, match="grad_shardings"):
+        make_federated_round(model, fed2, grad_shardings={"w1": None})
+
+
+# ---------------------------------------------------------------------------
+# through_aggregation under scan cohorts == the vmap path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt,clip", [("sgd", 0.0), ("sgd", 1.0),
+                                      ("sgdm", 1.0)])
+def test_scan_hypergrads_match_vmap(key, opt, clip):
+    """Regression for the old silently-wrong combination: scan used to feed
+    a pre-aggregated (1, ...) stack + w_fused=ones(1) into the ctrl update,
+    broadcasting against (cohort,) w_logits.  Now the streaming accumulate
+    VJP supplies per-client cotangents and one round's ctrl update (ctrl -
+    ctrl_lr * hypergrad) must match the vmap path <= 1e-5."""
+    model = make_mlp_model()
+    batch, meta, wts = _round_inputs()
+    ctrls = {}
+    for strat in ("vmap", "scan"):
+        fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                        client_lr=0.05, server_lr=0.1, server_opt=opt,
+                        clip_norm=clip, fused_update=True,
+                        cohort_strategy=strat,
+                        meta_mode="through_aggregation", ctrl_lr=1.0)
+        st = init_server_state(model, fed, key)
+        rf = jax.jit(make_federated_round(model, fed))
+        # two rounds: round 2 runs with w_logits != 0, so the client_loss
+        # metric parity below also covers the eff_w-vs-n_k weighting
+        for r in range(2):
+            st, m = rf(st, batch, meta, wts, jax.random.fold_in(key, r))
+        ctrls[strat] = (st, m)
+    wl_v = np.asarray(ctrls["vmap"][0]["ctrl"]["w_logits"])
+    wl_s = np.asarray(ctrls["scan"][0]["ctrl"]["w_logits"])
+    scale = max(float(np.max(np.abs(wl_v))), 1e-8)
+    assert float(np.max(np.abs(wl_v - wl_s))) <= 1e-5 * scale, (wl_v, wl_s)
+    np.testing.assert_allclose(float(ctrls["scan"][0]["ctrl"]["log_lr"]),
+                               float(ctrls["vmap"][0]["ctrl"]["log_lr"]),
+                               rtol=1e-5, atol=1e-7)
+    # same round, same numbers: client/meta losses and params line up too
+    for name in ("client_loss", "meta_loss"):
+        np.testing.assert_allclose(float(ctrls["scan"][1][name]),
+                                   float(ctrls["vmap"][1][name]),
+                                   rtol=1e-5, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(ctrls["scan"][0]["params"]),
+                    jax.tree.leaves(ctrls["vmap"][0]["params"])):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.max(np.abs(a - b) / (np.abs(b) + 1e-6)) <= 1e-5
+
+
+def test_scan_hypergrads_match_vmap_adam_warm(key):
+    """adam arm of the scan==vmap hypergradient gate, warm (t=5) state: at
+    t=1 from zeros the sign-step's weight hypergradient is ~0 and both
+    engines return fp32 cancellation noise (the documented caveat)."""
+    model = make_mlp_model()
+    params0 = model.init(key)
+    from repro.core import flat as F
+    spec = F.make_flat_spec(params0)
+    batch, meta, wts = _round_inputs()
+    m_tree = jax.tree.map(
+        lambda p: 0.3 * jax.random.normal(jax.random.fold_in(key, p.size + 3),
+                                          p.shape), params0)
+    v_tree = jax.tree.map(
+        lambda p: 0.1 + jnp.abs(jax.random.normal(
+            jax.random.fold_in(key, p.size + 4), p.shape)), params0)
+    ctrls = {}
+    for strat in ("vmap", "scan"):
+        fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                        client_lr=0.05, server_lr=0.1, server_opt="adam",
+                        clip_norm=1.0, fused_update=True,
+                        cohort_strategy=strat,
+                        meta_mode="through_aggregation", ctrl_lr=1.0)
+        st = init_server_state(model, fed, key)
+        st["opt"] = {"m": tuple(F.flatten_tree(spec, m_tree)),
+                     "v": tuple(F.flatten_tree(spec, v_tree)),
+                     "t": jnp.asarray(5, jnp.int32)}
+        st, _ = jax.jit(make_federated_round(model, fed))(
+            st, batch, meta, wts, key)
+        ctrls[strat] = st
+    wl_v = np.asarray(ctrls["vmap"]["ctrl"]["w_logits"])
+    wl_s = np.asarray(ctrls["scan"]["ctrl"]["w_logits"])
+    scale = max(float(np.max(np.abs(wl_v))), 1e-8)
+    assert float(np.max(np.abs(wl_v - wl_s))) <= 1e-5 * scale, (wl_v, wl_s)
+    np.testing.assert_allclose(float(ctrls["scan"]["ctrl"]["log_lr"]),
+                               float(ctrls["vmap"]["ctrl"]["log_lr"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_scan_through_aggregation_rounds_per_call(key):
+    """scan + through_aggregation + rounds_per_call>1 (the 90B/398B driver
+    shape): nested scans trace, ctrl state moves, metrics stay finite."""
+    model = make_mlp_model()
+    fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                    client_lr=0.05, server_lr=0.1, server_opt="adam",
+                    clip_norm=1.0, fused_update=True, cohort_strategy="scan",
+                    meta_mode="through_aggregation", ctrl_lr=0.05)
+    Kr = 2
+    batch, meta, wts = _round_inputs()
+    rf = jax.jit(make_federated_round(model, fed, rounds_per_call=Kr))
+    st = init_server_state(model, fed, key)
+    st, m = rf(st,
+               jax.tree.map(lambda x: jnp.stack([x] * Kr), batch),
+               jax.tree.map(lambda x: jnp.stack([x] * Kr), meta),
+               jnp.stack([wts] * Kr),
+               jnp.stack([jax.random.fold_in(key, r) for r in range(Kr)]))
+    assert int(st["round"]) == Kr
+    for name in ("client_loss", "grad_norm", "meta_loss", "ctrl_w_gnorm",
+                 "ctrl_lr_grad", "server_lr_eff"):
+        assert m[name].shape == (Kr,)
+        assert np.isfinite(np.asarray(m[name])).all(), name
+    assert not np.allclose(np.asarray(st["ctrl"]["w_logits"]), 0.0)
 
 
 # ---------------------------------------------------------------------------

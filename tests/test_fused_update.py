@@ -8,7 +8,12 @@
     autodiff through the legacy tree-map path, for both the Pallas bwd
     kernels and the ref oracle bwd;
   * rounds_per_call>1 (lax.scan driver) == K sequential single-round calls;
-  * the modulo-indexed epoch schedule == the old jnp.tile expansion.
+  * the modulo-indexed epoch schedule == the old jnp.tile expansion;
+  * scan-strategy cohort fusion: the streaming flat accumulation
+    (``accumulate_pass`` + custom VJP) produces BIT-identical aggregates to
+    the legacy pytree scan carry, and the fused scan round matches the
+    legacy scan round end to end (warm adam/yogi state per the sign-step
+    conditioning caveat the vmap tests document).
 """
 import jax
 import jax.numpy as jnp
@@ -18,9 +23,12 @@ import pytest
 from repro.configs.base import FedConfig
 from repro.core import flat as F
 from repro.core import init_server_state, make_federated_round, server_opt
-from repro.core.aggregate import weighted_mean
-from repro.core.client import fedavg_update, uga_update
+from repro.core.aggregate import (cohort_gradient, scan_cohort_gradient_flat,
+                                  weighted_mean)
+from repro.core.client import (fedavg_update, make_client_update, uga_update)
+from repro.kernels.fused_update import kernel as K
 from repro.kernels.fused_update import ops as O
+from repro.kernels.fused_update import ref as R
 from repro.models.model import Model
 
 
@@ -376,6 +384,163 @@ def test_grad_wrt_params_through_fused_matches_legacy(key, opt):
 
     assert_grads_close(jax.grad(fused_obj)(params),
                        jax.grad(legacy_obj)(params))
+
+
+# ---------------------------------------------------------------------------
+# scan-strategy cohort fusion: streaming flat accumulation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_ref", [False, True])
+def test_accumulate_pass_matches_formula_and_vjp(key, use_ref):
+    """acc + w*g forward (Pallas == ref == jnp) and the custom VJP
+    (d_acc identity, dg = w d_out, dw = <g, d_out>) == XLA autodiff."""
+    rng = np.random.default_rng(3)
+    acc = jnp.asarray(rng.normal(0, 1, (16, F.LANES)), jnp.float32)
+    g = jnp.asarray(rng.normal(0, 1, (16, F.LANES)), jnp.float32)
+    w = jnp.float32(0.37)
+    got = (R.accumulate_ref(acc, g, w) if use_ref
+           else K.accumulate_pass(acc, g, w, interpret=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc + w * g),
+                               rtol=1e-6, atol=1e-6)
+
+    accum = O.flat_accumulate(use_ref=use_ref, interpret=True)
+    obj = lambda a, gg, ww: jnp.sum(jnp.sin(accum(a, gg, ww)))
+    ref = lambda a, gg, ww: jnp.sum(jnp.sin(a + ww * gg))
+    got_g = jax.grad(obj, argnums=(0, 1, 2))(acc, g, w)
+    want_g = jax.grad(ref, argnums=(0, 1, 2))(acc, g, w)
+    assert_grads_close(got_g, want_g)
+
+
+@pytest.mark.parametrize("use_ref", [False, True])
+@pytest.mark.parametrize("algo", ["uga", "fedavg"])
+def test_scan_flat_cohort_bitmatches_legacy_carry(key, use_ref, algo):
+    """The streaming flat accumulation is the SAME fp32 math in the same
+    client order as the legacy pytree carry — the aggregate and the
+    weighted client loss must match bit for bit."""
+    model = make_mlp_model()
+    params = model.init(key)
+    spec = F.make_flat_spec(params)
+    rng = np.random.default_rng(4)
+    batch = sample_batch(rng, cohort=4, b=16)
+    wts = jnp.asarray(rng.uniform(1.0, 5.0, 4), jnp.float32)
+    cu = make_client_update(algo, model.loss, local_steps=2)
+
+    G_legacy, l_legacy = jax.jit(lambda p: cohort_gradient(
+        cu, p, batch, wts, 0.05, key, strategy="scan"))(params)
+    G_flat, l_flat = jax.jit(lambda p: scan_cohort_gradient_flat(
+        cu, p, batch, wts, 0.05, key, spec=spec, use_ref=use_ref))(params)
+    G_flat_tree = F.unflatten_tree(spec, G_flat)
+    np.testing.assert_array_equal(np.asarray(l_flat), np.asarray(l_legacy))
+    for a, b in zip(jax.tree.leaves(G_flat_tree), jax.tree.leaves(G_legacy)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("opt", ["sgd", "sgdm"])
+@pytest.mark.parametrize("clip", [0.0, 1.0])
+def test_scan_fused_round_matches_legacy_scan_round(key, opt, clip):
+    """Full round, cohort_strategy='scan': fused flat streaming == legacy
+    pytree carry to <= 1e-5 relative on params and round metrics (smooth
+    optimizers; adam/yogi are gated warm-state below, same as the vmap
+    engine's sign-step caveat)."""
+    model = make_mlp_model()
+    rng = np.random.default_rng(0)
+    batch = sample_batch(rng, cohort=4, b=16)
+    meta = {"x": batch["x"][0], "y": batch["y"][0]}
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    kw = dict(algorithm="uga", meta=True, cohort=4, local_steps=2,
+              client_lr=0.05, server_lr=0.1, meta_lr=0.05, server_opt=opt,
+              clip_norm=clip, cohort_strategy="scan")
+    states, metrics = {}, {}
+    for fused in (False, True):
+        fed = FedConfig(fused_update=fused, **kw)
+        rf = jax.jit(make_federated_round(model, fed))
+        st = init_server_state(model, fed, key)
+        states[fused], metrics[fused] = rf(st, batch, meta, wts, key)
+    for k in states[False]["params"]:
+        a = np.asarray(states[True]["params"][k])
+        b = np.asarray(states[False]["params"][k])
+        rel = np.max(np.abs(a - b) / (np.abs(b) + 1e-6))
+        assert rel <= 1e-5, (opt, clip, k, rel)
+    for name in ("client_loss", "grad_norm", "meta_loss"):
+        np.testing.assert_allclose(float(metrics[True][name]),
+                                   float(metrics[False][name]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("opt", ["adam", "yogi"])
+@pytest.mark.parametrize("clip", [0.0, 1.0])
+def test_scan_fused_round_matches_legacy_warm_adam_yogi(key, opt, clip):
+    """adam/yogi arm of the scan bit-compat gate, warm (t=5) opt state: at
+    t=1 from zeros the step saturates to lr*sign(g) whose params are ulp-
+    unstable in ANY engine (the documented vmap caveat); warm state makes
+    the comparison well-conditioned and both paths must agree <= 1e-5."""
+    model = make_mlp_model()
+    params0 = model.init(key)
+    spec = F.make_flat_spec(params0)
+    rng = np.random.default_rng(1)
+    batch = sample_batch(rng, cohort=4, b=16)
+    meta = {"x": batch["x"][0], "y": batch["y"][0]}
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    m_tree = jax.tree.map(
+        lambda p: 0.3 * jax.random.normal(jax.random.fold_in(key, p.size + 3),
+                                          p.shape), params0)
+    v_tree = jax.tree.map(
+        lambda p: 0.1 + jnp.abs(jax.random.normal(
+            jax.random.fold_in(key, p.size + 4), p.shape)), params0)
+    kw = dict(algorithm="uga", meta=True, cohort=4, local_steps=2,
+              client_lr=0.05, server_lr=0.1, meta_lr=0.05, server_opt=opt,
+              clip_norm=clip, cohort_strategy="scan")
+    states = {}
+    for fused in (False, True):
+        fed = FedConfig(fused_update=fused, **kw)
+        st = init_server_state(model, fed, key)
+        if fused:
+            st["opt"] = {"m": tuple(F.flatten_tree(spec, m_tree)),
+                         "v": tuple(F.flatten_tree(spec, v_tree)),
+                         "t": jnp.asarray(5, jnp.int32)}
+        else:
+            st["opt"] = {"m": m_tree, "v": v_tree,
+                         "t": jnp.asarray(5, jnp.int32)}
+        rf = jax.jit(make_federated_round(model, fed))
+        states[fused], _ = rf(st, batch, meta, wts, key)
+    for k in states[False]["params"]:
+        a = np.asarray(states[True]["params"][k])
+        b = np.asarray(states[False]["params"][k])
+        rel = np.max(np.abs(a - b) / (np.abs(b) + 1e-6))
+        assert rel <= 1e-5, (opt, clip, k, rel)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_scan_rounds_per_call_matches_sequential(key, fused):
+    """The scanned multi-round driver composes with the scan cohort
+    strategy (nested lax.scan: rounds over clients)."""
+    model = make_mlp_model()
+    Kr = 3
+    fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
+                    client_lr=0.05, server_lr=0.1, meta_lr=0.05,
+                    server_opt="sgdm", clip_norm=1.0, lr_decay=0.9,
+                    cohort_strategy="scan", fused_update=fused)
+    rng = np.random.default_rng(1)
+    batches = [sample_batch(rng, cohort=4, b=16) for _ in range(Kr)]
+    metas = [{"x": b["x"][0], "y": b["y"][0]} for b in batches]
+    wts = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    rngs = jnp.stack([jax.random.fold_in(key, r) for r in range(Kr)])
+
+    rf1 = jax.jit(make_federated_round(model, fed))
+    st = init_server_state(model, fed, key)
+    for r in range(Kr):
+        st, _ = rf1(st, batches[r], metas[r], wts, rngs[r])
+
+    rfK = jax.jit(make_federated_round(model, fed, rounds_per_call=Kr))
+    stK = init_server_state(model, fed, key)
+    stK, mK = rfK(stK,
+                  jax.tree.map(lambda *xs: jnp.stack(xs), *batches),
+                  jax.tree.map(lambda *xs: jnp.stack(xs), *metas),
+                  jnp.stack([wts] * Kr), rngs)
+    assert int(stK["round"]) == int(st["round"]) == Kr
+    for a, b in zip(jax.tree.leaves(stK["params"]),
+                    jax.tree.leaves(st["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])

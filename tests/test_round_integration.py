@@ -95,6 +95,20 @@ def test_fedshare_injection_changes_batches():
     assert not np.allclose(a["cohort_batch"]["x"], b["cohort_batch"]["x"])
 
 
+def test_fedshare_without_shared_indices_raises():
+    """share=True with no FedShare global set used to silently return
+    batches of size batch - n_share — a shape mismatch far downstream.
+    It must raise at the call site instead."""
+    data = _noniid_problem()
+    data.shared_indices = None
+    with pytest.raises(ValueError, match="shared_indices"):
+        data.sample_round(0, cohort=4, batch=16, share=True)
+    # share_fraction=0 degenerates to no injection: still fine
+    s = data.sample_round(0, cohort=4, batch=16, share=True,
+                          share_fraction=0.0)
+    assert s["cohort_batch"]["x"].shape[1] == 16
+
+
 def test_lr_decay_applied():
     # fedavg: the pseudo-gradient scales with the (decayed) client lr.
     # (UGA's server step uses the non-decayed eta_g by design — Eq. 14.)
