@@ -20,8 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import (init_server_state, RoundFnCache,
-                        stack_round_inputs)
+from repro.core import FederatedTrainer
 from repro.data.pipeline import FederatedData
 
 # method name -> FedConfig kwargs (the paper's comparison grid)
@@ -88,50 +87,34 @@ def train_method(model, data: FederatedData, method: str, *, rounds: int,
                     server_lr=uga_server_lr,
                     meta_lr=lr, lr_decay=lr_decay, prox_mu=prox_mu,
                     clip_norm=clip_norm, fused_update=fused)
-    key = jax.random.PRNGKey(seed)
-    state = init_server_state(model, fed, key)
     loss_jit = jax.jit(model.loss)
-    get_rf = RoundFnCache(model, fed)
+    trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
+                               seed=seed)
 
-    def sample(r):
-        s = data.sample_round(r, cohort=cohort, batch=batch,
-                              share=kw["share"])
+    def sample_meta(d, r, mb_size, sample):
         if not kw["meta"]:
             # round_fn never reads meta_batch when meta is off; None (an
             # empty pytree) skips the per-round sample+stack+transfer
-            return s, None
-        mb = data.sample_meta(r, meta_batch) if data.meta_indices is not None \
-            else jax.tree.map(lambda x: x[:meta_batch], s["cohort_batch"])
-        return s, mb
+            return None
+        return d.sample_meta(r, mb_size) if d.meta_indices is not None \
+            else jax.tree.map(lambda x: x[:mb_size], sample["cohort_batch"])
 
     history = []
-    r = 0
-    while r < rounds:
-        k = min(max(rounds_per_call, 1), rounds - r)
-        if k == 1:
-            s, mb = sample(r)
-            state, m = get_rf(1)(
-                state, jax.tree.map(jnp.asarray, s["cohort_batch"]),
-                jax.tree.map(jnp.asarray, mb),
-                jnp.asarray(s["client_weights"]), jax.random.fold_in(key, r))
-            client_loss = float(m["client_loss"])
-        else:
-            pairs = [sample(r + j) for j in range(k)]
-            cb, mbs, wts, rngs = stack_round_inputs(
-                [p[0]["cohort_batch"] for p in pairs],
-                [p[1] for p in pairs],
-                [p[0]["client_weights"] for p in pairs],
-                [jax.random.fold_in(key, r + j) for j in range(k)])
-            state, m = get_rf(k)(state, cb, mbs, wts, rngs)
-            client_loss = float(m["client_loss"][-1])
-        last = r + k - 1
-        if any((r + j) % eval_every == 0 or r + j == rounds - 1
-               for j in range(k)):
-            ev = evaluate(model, state["params"], data, eval_idx,
+
+    def on_records(recs, tr):
+        # eval on chunk boundaries when any round in the chunk hits
+        # eval_every (or training ends) — the chunked-eval schedule the
+        # table budgets were re-validated under
+        if any(rec["round"] % eval_every == 0 or rec["round"] == rounds - 1
+               for rec in recs):
+            ev = evaluate(model, tr.state["params"], data, eval_idx,
                           loss_fn=loss_jit)
-            history.append({"round": last, **ev,
-                            "client_loss": client_loss})
-        r += k
+            history.append({"round": recs[-1]["round"], **ev,
+                            "client_loss": recs[-1]["client_loss"]})
+
+    trainer.run(data, rounds=rounds, cohort=cohort, batch=batch,
+                meta_batch=meta_batch, share=kw["share"],
+                sample_meta=sample_meta, on_records=on_records)
     return history
 
 

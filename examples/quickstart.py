@@ -1,39 +1,49 @@
-"""Quickstart: one federated round of FedMeta w/ UGA on a reduced LM, CPU.
+"""Quickstart: FedMeta w/ UGA on a reduced LM through the plugin API, CPU.
+
+Three registries + one facade (see repro/core/__init__.py):
+
+  * ClientAlgorithm  — what a client computes   (--algorithm uga/fednova/...)
+  * CohortExecutor   — how the cohort runs      (vmap / scan / sharded)
+  * ServerEngine     — the server update        (legacy_tree / fused_flat)
+  * FederatedTrainer — the driver loop          (jit cache, chunking,
+                                                 checkpoint/resume, history)
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax.numpy as jnp
 
 from repro.configs import FedConfig, get_smoke
-from repro.core import init_server_state, make_federated_round
+from repro.core import (FederatedTrainer, available_algorithms,
+                        available_engines, available_executors)
+from repro.data.pipeline import FederatedData
 from repro.models.model import build_model
 
 # 1. the federated learner: any assigned architecture (reduced variant here)
 cfg = get_smoke("smollm-360m")
 model = build_model(cfg, dtype=jnp.float32, loss_chunk=64)
 
-# 2. the paper's algorithm knobs: UGA client updates + FedMeta server step
+# 2. the paper's algorithm knobs — every name here is a registry lookup
+print(f"algorithms: {available_algorithms()}")
+print(f"executors:  {available_executors()}  engines: {available_engines()}")
 fed = FedConfig(algorithm="uga", meta=True, cohort=4, local_steps=2,
                 client_lr=0.02, server_lr=0.02, meta_lr=0.02)
 
-round_fn = jax.jit(make_federated_round(model, fed))
-key = jax.random.PRNGKey(0)
-state = init_server_state(model, fed, key)
-
-# 3. synthetic client data: (cohort, per-client batch, seq+1) token ids
+# 3. synthetic client data: 8 clients of (n, seq+1) token ids + a D_meta set
 rng = np.random.default_rng(0)
-cohort_batch = {"tokens": jnp.asarray(
-    rng.integers(0, cfg.vocab_size, (fed.cohort, 8, 65)), jnp.int32)}
-meta_batch = {"tokens": jnp.asarray(
-    rng.integers(0, cfg.vocab_size, (8, 65)), jnp.int32)}
-weights = jnp.full((fed.cohort,), 8.0)
+tokens = rng.integers(0, cfg.vocab_size, (256, 65)).astype(np.int32)
+data = FederatedData(arrays={"tokens": tokens},
+                     client_indices=[np.arange(i * 32, (i + 1) * 32)
+                                     for i in range(8)],
+                     meta_indices=rng.choice(256, 16, replace=False), seed=0)
 
-for r in range(5):
-    state, metrics = round_fn(state, cohort_batch, meta_batch, weights,
-                              jax.random.fold_in(key, r))
-    print(f"round {r}: client_loss={float(metrics['client_loss']):.4f} "
-          f"meta_loss={float(metrics['meta_loss']):.4f} "
-          f"grad_norm={float(metrics['grad_norm']):.4f}")
-print("OK — UGA keep-trace gradients aggregated unbiasedly, meta step applied")
+# 4. five rounds through the facade (one record per round)
+trainer = FederatedTrainer(model, fed, seed=0)
+history = trainer.run(data, rounds=5, cohort=fed.cohort, batch=8,
+                      meta_batch=8)
+for rec in history:
+    print(f"round {rec['round']}: client_loss={rec['client_loss']:.4f} "
+          f"meta_loss={rec['meta_loss']:.4f} "
+          f"grad_norm={rec['grad_norm']:.4f}")
+print("OK — UGA keep-trace gradients aggregated unbiasedly, meta step "
+      "applied, all through the algorithm/executor/engine registries")

@@ -202,10 +202,14 @@ SHAPES = {
 class FedConfig:
     """Paper notation: B local batch, E local epochs, C client fraction.
 
-    algorithm:
+    algorithm: any name in the ClientAlgorithm registry
+    (``repro.core.algorithms``).  Built-ins:
       'fedavg'   — FedAvg local SGD, delta aggregation (biased)   [paper baseline]
       'uga'      — keep-trace GD + gradient evaluation (unbiased) [paper §3.1]
       'fedprox'  — FedAvg + proximal term mu/2 ||w - w_t||^2      [paper baseline]
+      'fednova'  — tau_k-normalized delta averaging               [Wang et al. 2020]
+    New algorithms register via ``repro.core.algorithms.register_algorithm``
+    (one file, no core edits) and are accepted here by name.
     meta: FedMeta server meta-update after aggregation            [paper §3.2]
     share: FedShare — inject globally shared samples into client batches.
     """
@@ -251,12 +255,43 @@ class FedConfig:
     ctrl_lr: float = 0.01               # hypergradient step size for the
                                         # controllable-weights state
                                         # (meta_mode='through_aggregation')
+    participation: float = 1.0          # <1: partial participation /
+                                        # straggler dropout — each round
+                                        # keeps a client with this prob and
+                                        # zeroes dropped clients' weights
+                                        # inside the aggregation (every
+                                        # executor/engine supports it)
+    engine: Optional[str] = None        # server-engine registry name
+                                        # (repro.core.engines); None derives
+                                        # legacy_tree / fused_flat from
+                                        # fused_update.  A registered custom
+                                        # engine declaring the
+                                        # through_aggregation capability
+                                        # makes that meta_mode valid
+                                        # regardless of fused_update.
 
     def __post_init__(self):
-        assert self.algorithm in ("fedavg", "uga", "fedprox"), self.algorithm
-        assert self.cohort_strategy in ("vmap", "scan"), self.cohort_strategy
+        # registry-backed validation (lazy imports: repro.core modules
+        # import this one at module load, the registries only at use time)
+        from repro.core.algorithms import get_algorithm
+        from repro.core.executors import available_executors
+        get_algorithm(self.algorithm)          # raises naming the registry
+        # "sharded" is a modifier executor (selected by grad_shardings,
+        # wrapping THIS field as its base strategy), not a base strategy
+        base_strategies = tuple(n for n in available_executors()
+                                if n != "sharded")
+        if self.cohort_strategy not in base_strategies:
+            raise ValueError(
+                f"unknown cohort_strategy {self.cohort_strategy!r}; "
+                f"registered base cohort executors: {base_strategies} "
+                "(the 'sharded' executor is selected by passing "
+                "grad_shardings to make_federated_round, not here)")
         assert self.local_steps >= 1
         assert self.local_epochs >= 1
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation={self.participation} must be in (0, 1]: it "
+                "is the per-round probability a sampled client reports")
         if self.meta_mode not in ("post", "through_aggregation"):
             # ValueError, not assert: a typo'd mode under python -O would
             # otherwise silently fall through to meta_mode='post' behavior
@@ -264,17 +299,19 @@ class FedConfig:
                 f"unknown meta_mode {self.meta_mode!r}; expected 'post' or "
                 "'through_aggregation'")
         if self.meta_mode == "through_aggregation":
-            # ValueError (not assert): the combination must fail loudly in
-            # any interpreter mode — the legacy tree-map branch has no ctrl
-            # hypergradient path and would die on an undefined new_ctrl at
-            # trace time.  vmap AND scan cohorts are both supported (scan
-            # streams the per-client weight cotangents through the fused
-            # accumulate VJP).
-            if not self.fused_update:
+            # The mode is a *capability the server engine declares*
+            # (repro.core.engines); make_federated_round re-checks against
+            # the resolved engine, but fail at config time too so the
+            # combination is loud in any interpreter mode.
+            from repro.core.engines import resolve_engine
+            eng = resolve_engine(self)
+            if "through_aggregation" not in eng.meta_capabilities:
                 raise ValueError(
-                    "meta_mode='through_aggregation' differentiates the "
-                    "fused engine's custom VJP; set fused_update=True or "
-                    "use meta_mode='post'")
+                    f"meta_mode='through_aggregation' needs a server "
+                    f"engine declaring the capability, but {eng.name!r} "
+                    f"declares {sorted(eng.meta_capabilities)}; set "
+                    "fused_update=True (the fused_flat engine's custom "
+                    "VJP) or use meta_mode='post'")
             if not self.server_lr > 0:
                 raise ValueError(
                     "meta_mode='through_aggregation' seeds the controllable "

@@ -1,0 +1,147 @@
+"""Client-algorithm plugin registry — add a federated algorithm in ONE file.
+
+A :class:`ClientAlgorithm` owns everything the round engine needs to know
+about a local-update rule:
+
+  * ``build(loss_fn, *, local_steps, local_epochs, prox_mu, remat)`` — a
+    factory returning the client update ``(w_t, batch, lr, rng) ->
+    (G_k, client_loss)``, where ``G_k`` is the gradient-like quantity the
+    server aggregates (Eq. 14);
+  * ``pseudo_gradient`` — the aggregation semantics of ``G_k``.  True means
+    ``G_k`` is a parameter delta (``w_t - w_k``) whose weighted mean under a
+    *plain-SGD unit-step* server IS the FedAvg parameter average, so the
+    server lr is forced to 1.0 exactly there (see
+    :func:`repro.core.round.resolve_server_lr`).  False means ``G_k`` is a
+    true gradient (UGA) or a normalized direction (FedNova) and the server
+    honors ``FedConfig.server_lr`` everywhere.
+
+How to add an algorithm in one file (no edits to ``core/round.py``)::
+
+    # myalgo.py — anywhere importable
+    from repro.core.algorithms import register_algorithm
+
+    @register_algorithm("myalgo", pseudo_gradient=False,
+                        description="my local update rule")
+    def build_myalgo(loss_fn, *, local_steps, local_epochs, prox_mu, remat):
+        def update(w_t, batch, lr, rng):
+            ...                      # any JAX computation
+            return g_k, client_loss
+        return update
+
+Importing ``myalgo`` makes ``FedConfig(algorithm="myalgo")``,
+``make_federated_round``, ``FederatedTrainer`` and
+``launch/train.py --algorithm myalgo`` all work, on every cohort executor
+and server engine — the registries compose.
+
+The paper's algorithms (fedavg / uga / fedprox) are registrations of the
+strategies in :mod:`repro.core.client`; ``fednova`` below is the proof that
+a new algorithm lands purely through this registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+
+from repro.core.client import fedavg_update, uga_update
+from repro.core.registry import Registry
+
+__all__ = ["ClientAlgorithm", "register_algorithm", "get_algorithm",
+           "available_algorithms", "fednova_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientAlgorithm:
+    """One registered local-update rule (see module docstring)."""
+    name: str
+    build: Callable            # (loss_fn, *, local_steps, local_epochs,
+    #                             prox_mu, remat) -> client_update
+    pseudo_gradient: bool      # True: G_k = w_t - w_k (delta semantics);
+    #                            plain-SGD server lr is forced to 1.0
+    description: str = ""
+
+
+_ALGORITHMS = Registry("client algorithm",
+                       "repro.core.algorithms.register_algorithm")
+
+
+def register_algorithm(name: str, *, pseudo_gradient: bool = False,
+                       description: str = ""):
+    """Decorator registering a client-update factory under ``name``."""
+    def deco(build: Callable) -> Callable:
+        _ALGORITHMS.register(name, ClientAlgorithm(
+            name=name, build=build, pseudo_gradient=pseudo_gradient,
+            description=description or (build.__doc__ or "").strip()))
+        return build
+    return deco
+
+
+def get_algorithm(name: str) -> ClientAlgorithm:
+    return _ALGORITHMS.get(name)
+
+
+def available_algorithms() -> tuple:
+    return _ALGORITHMS.names()
+
+
+# ---------------------------------------------------------------------------
+# built-in registrations: the paper's three algorithms
+# ---------------------------------------------------------------------------
+@register_algorithm("uga", pseudo_gradient=False,
+                    description="keep-trace GD + gradient evaluation "
+                                "(unbiased aggregation, paper §3.1)")
+def _build_uga(loss_fn, *, local_steps, local_epochs, prox_mu, remat):
+    del prox_mu
+    return partial(uga_update, loss_fn, local_steps=local_steps,
+                   local_epochs=local_epochs, remat=remat)
+
+
+@register_algorithm("fedavg", pseudo_gradient=True,
+                    description="local SGD, delta aggregation (biased "
+                                "baseline, paper §2.1)")
+def _build_fedavg(loss_fn, *, local_steps, local_epochs, prox_mu, remat):
+    del prox_mu
+    return partial(fedavg_update, loss_fn, local_steps=local_steps,
+                   local_epochs=local_epochs, remat=remat)
+
+
+@register_algorithm("fedprox", pseudo_gradient=True,
+                    description="fedavg + proximal term mu/2 ||w - w_t||^2 "
+                                "(Li et al., 2018)")
+def _build_fedprox(loss_fn, *, local_steps, local_epochs, prox_mu, remat):
+    return partial(fedavg_update, loss_fn, local_steps=local_steps,
+                   local_epochs=local_epochs, prox_mu=prox_mu, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# FedNova — normalized averaging, shipped purely through the registry
+# ---------------------------------------------------------------------------
+def fednova_update(loss_fn, w_t, batch, lr, rng=None, *, local_steps: int = 2,
+                   local_epochs: int = 1, prox_mu: float = 0.0,
+                   remat: bool = True):
+    """FedNova-style normalized averaging (Wang et al., 2020).
+
+    The local delta is divided by the client's local step count
+    tau_k = local_steps * local_epochs, so the aggregated direction is the
+    *per-step average progress*: heterogeneous tau_k no longer biases the
+    mean toward clients that ran longer (the objective-inconsistency
+    FedNova fixes).  The server honors ``server_lr`` (the effective tau);
+    with ``server_opt="sgd"`` and ``server_lr = tau`` (uniform tau_k) it
+    reproduces FedAvg exactly.
+    """
+    pseudo, l = fedavg_update(loss_fn, w_t, batch, lr, rng,
+                              local_steps=local_steps,
+                              local_epochs=local_epochs, prox_mu=prox_mu,
+                              remat=remat)
+    tau = float(local_steps * local_epochs)
+    return jax.tree.map(lambda g: g / tau, pseudo), l
+
+
+register_algorithm("fednova", pseudo_gradient=False,
+                   description="tau_k-normalized delta averaging "
+                               "(FedNova, Wang et al. 2020)")(
+    lambda loss_fn, *, local_steps, local_epochs, prox_mu, remat:
+        partial(fednova_update, loss_fn, local_steps=local_steps,
+                local_epochs=local_epochs, prox_mu=prox_mu, remat=remat))

@@ -23,7 +23,6 @@ on the WHOLE client batch (the paper evaluates on the full local data D_k).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -206,15 +205,11 @@ def fedavg_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
 def make_client_update(algorithm: str, loss_fn: LossFn, *, local_steps: int,
                        local_epochs: int = 1, prox_mu: float = 0.0,
                        remat: bool = True):
-    """Bind a strategy: (w_t, batch, lr, rng) -> (G_k, client_loss)."""
-    if algorithm == "uga":
-        return partial(uga_update, loss_fn, local_steps=local_steps,
-                       local_epochs=local_epochs, remat=remat)
-    if algorithm == "fedavg":
-        return partial(fedavg_update, loss_fn, local_steps=local_steps,
-                       local_epochs=local_epochs, remat=remat)
-    if algorithm == "fedprox":
-        return partial(fedavg_update, loss_fn, local_steps=local_steps,
-                       local_epochs=local_epochs, prox_mu=prox_mu,
-                       remat=remat)
-    raise ValueError(algorithm)
+    """Bind a strategy: (w_t, batch, lr, rng) -> (G_k, client_loss).
+
+    Back-compat shim over the :mod:`repro.core.algorithms` registry — any
+    algorithm registered there (built-ins plus user plugins) resolves."""
+    from repro.core.algorithms import get_algorithm   # lazy: import cycle
+    return get_algorithm(algorithm).build(
+        loss_fn, local_steps=local_steps, local_epochs=local_epochs,
+        prox_mu=prox_mu, remat=remat)

@@ -1,0 +1,276 @@
+"""Cohort-executor plugin registry — HOW a round runs its cohort.
+
+A :class:`CohortExecutor` owns the execution strategy for the per-client
+local updates (client-parallel vmap, client-sequential scan, or explicitly
+sharded cohorts) and always yields a **uniform aggregate handle** so server
+engines never inspect the strategy:
+
+  * :class:`FlatAggregate` — the fused engine's per-dtype-group
+    ``(rows, LANES)`` fp32 buffers holding the Eq. (14) weighted mean
+    (``sq_norm`` carries ``||G||^2`` when pass 1 already reduced it);
+  * :class:`TreeAggregate` — the weighted-mean pytree, possibly carrying
+    sharding constraints (the form the legacy tree-map engine and the
+    sharded cohort path consume).
+
+Executors declare which handle kinds they can ``produce``; engines declare
+which they ``accept`` (see :mod:`repro.core.engines`) and the round builder
+picks the overlap.  Executors that retain (vmap) or can re-run (scan) the
+per-client gradients additionally support :meth:`CohortExecutor.reweightable`
+— a differentiable ``weights -> handle`` closure, which is what
+``meta_mode="through_aggregation"`` differentiates for its per-client
+weight hypergradients.  The sharded executor pre-aggregates per leaf, so it
+declares ``supports_reweight = False``.
+
+Register a new strategy with :func:`register_executor`; the factory
+receives the :class:`~repro.configs.base.FedConfig` plus the round
+builder's sharding arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import cohort_gradient, scan_cohort_gradient_flat
+from repro.core.flat import FlatSpec, make_flat_spec
+from repro.core.registry import Registry
+from repro.kernels.fused_update.ops import flat_weighted_aggregate
+
+PyTree = Any
+
+__all__ = ["FlatAggregate", "TreeAggregate", "ReweightableCohort",
+           "CohortExecutor", "register_executor", "get_executor",
+           "available_executors", "resolve_executor"]
+
+
+# ---------------------------------------------------------------------------
+# aggregate handles
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FlatAggregate:
+    """Eq. (14) weighted mean in the fused engine's flat layout."""
+    groups: list                       # per-dtype-group (rows, LANES) fp32
+    spec: FlatSpec
+    sq_norm: Optional[jax.Array] = None   # ||G||^2 if pass 1 computed it
+
+
+@dataclasses.dataclass
+class TreeAggregate:
+    """Eq. (14) weighted mean as a pytree (sharding constraints intact)."""
+    tree: PyTree
+
+
+@dataclasses.dataclass
+class ReweightableCohort:
+    """A cohort whose aggregation can be re-run under different weights.
+
+    ``aggregate(weights)`` is differentiable w.r.t. ``weights`` and returns
+    ``(handle, client_loss)`` where the loss metric is weighted by the raw
+    n_k the cohort was created with, so it reports the same number no
+    matter what effective weights the controllable state chose."""
+    aggregate: Callable      # (weights,) -> (handle, client_loss)
+
+
+# ---------------------------------------------------------------------------
+# executor protocol + registry
+# ---------------------------------------------------------------------------
+class CohortExecutor:
+    """Protocol.  Subclass (or duck-type) and register a factory."""
+    name: str = "?"
+    produces: frozenset = frozenset()        # subset of {"flat", "tree"}
+    supports_reweight: bool = False
+
+    def run(self, client_update, params, cohort_batch, client_weights,
+            lr, rng, *, kind: str) -> Tuple[Any, jax.Array]:
+        """Run every client and aggregate.  Returns (handle, client_loss);
+        ``kind`` is one of this executor's ``produces``."""
+        raise NotImplementedError
+
+    def reweightable(self, client_update, params, cohort_batch,
+                     client_weights, lr, rng) -> ReweightableCohort:
+        """Run (or prepare) the cohort so aggregation can be repeated under
+        different weights; ``client_weights`` (n_k) weight the loss
+        metric."""
+        raise NotImplementedError(
+            f"cohort executor {self.name!r} does not support reweightable "
+            "aggregation")
+
+
+_EXECUTORS = Registry("cohort executor",
+                      "repro.core.executors.register_executor")
+
+
+def register_executor(name: str):
+    """Decorator registering an executor factory:
+    ``factory(fed, *, spmd_axis_name, grad_shardings) -> CohortExecutor``."""
+    def deco(factory: Callable) -> Callable:
+        _EXECUTORS.register(name, factory)
+        return factory
+    return deco
+
+
+def get_executor(name: str) -> Callable:
+    return _EXECUTORS.get(name)
+
+
+def available_executors() -> tuple:
+    return _EXECUTORS.names()
+
+
+def resolve_executor(fed, *, spmd_axis_name=None, grad_shardings=None,
+                     executor: Optional[str] = None) -> CohortExecutor:
+    """Pick the executor for a round: an explicit registry ``executor``
+    name wins; otherwise ``grad_shardings`` selects the sharded executor
+    (wrapping ``fed.cohort_strategy``) and ``fed.cohort_strategy`` selects
+    vmap/scan."""
+    if executor is None:
+        executor = "sharded" if grad_shardings is not None \
+            else fed.cohort_strategy
+    elif grad_shardings is not None and executor != "sharded":
+        # an explicit override would silently drop the constraints (the
+        # flat/scan paths never attach them) and GSPMD would all-gather
+        # the per-client gradient stack — the HBM blow-up the sharded
+        # executor exists to prevent; fail loudly instead
+        raise ValueError(
+            f"grad_shardings is set but executor={executor!r} was "
+            "explicitly requested; only the 'sharded' executor honors "
+            "per-leaf gradient sharding constraints. Drop the executor "
+            "override (grad_shardings selects it automatically) or drop "
+            "grad_shardings.")
+    return get_executor(executor)(fed, spmd_axis_name=spmd_axis_name,
+                                  grad_shardings=grad_shardings)
+
+
+# ---------------------------------------------------------------------------
+# built-in executors
+# ---------------------------------------------------------------------------
+@register_executor("vmap")
+class VmapExecutor(CohortExecutor):
+    """Client-parallel: every local trajectory runs simultaneously.
+    Produces flat handles by retaining the (cohort, *param) gradient stack
+    and running the differentiable aggregate kernel (pass 1), or tree
+    handles via the per-leaf weighted mean."""
+    name = "vmap"
+    produces = frozenset({"flat", "tree"})
+    supports_reweight = True
+
+    def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
+        self._agg_dtype = jnp.dtype(fed.grad_agg_dtype)
+        self._spmd = spmd_axis_name
+        self._shardings = grad_shardings     # only the tree path honors it
+
+    def _stack(self, client_update, params, cohort_batch, client_weights,
+               lr, rng):
+        return cohort_gradient(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            strategy="vmap", agg_dtype=self._agg_dtype,
+            spmd_axis_name=self._spmd, aggregate=False)
+
+    def run(self, client_update, params, cohort_batch, client_weights,
+            lr, rng, *, kind):
+        if kind == "tree":
+            G, loss = cohort_gradient(
+                client_update, params, cohort_batch, client_weights, lr,
+                rng, strategy="vmap", agg_dtype=self._agg_dtype,
+                spmd_axis_name=self._spmd, grad_shardings=self._shardings)
+            return TreeAggregate(G), loss
+        g_stack, loss = self._stack(client_update, params, cohort_batch,
+                                    client_weights, lr, rng)
+        spec = make_flat_spec(params)
+        Gs, ssq = flat_weighted_aggregate(spec, g_stack, client_weights)
+        return FlatAggregate(Gs, spec, sq_norm=ssq), loss
+
+    def reweightable(self, client_update, params, cohort_batch,
+                     client_weights, lr, rng):
+        # clients run ONCE here (loss already n_k-weighted); aggregate()
+        # only re-reduces the retained stack under new weights (cheap,
+        # differentiable via the aggregate kernel's custom VJP)
+        spec = make_flat_spec(params)
+        g_stack, loss = self._stack(client_update, params, cohort_batch,
+                                    client_weights, lr, rng)
+
+        def aggregate(weights):
+            Gs, ssq = flat_weighted_aggregate(spec, g_stack, weights)
+            return FlatAggregate(Gs, spec, sq_norm=ssq), loss
+
+        return ReweightableCohort(aggregate=aggregate)
+
+
+@register_executor("scan")
+class ScanExecutor(CohortExecutor):
+    """Client-sequential: one trajectory alive at a time.  Flat handles
+    stream each client's flattened gradient into the dtype-group buffers
+    (Pallas FMA; the scan carry IS the buffers); tree handles keep the
+    legacy pytree carry."""
+    name = "scan"
+    produces = frozenset({"flat", "tree"})
+    supports_reweight = True
+
+    def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
+        del spmd_axis_name, grad_shardings
+        self._agg_dtype = jnp.dtype(fed.grad_agg_dtype)
+
+    def run(self, client_update, params, cohort_batch, client_weights,
+            lr, rng, *, kind):
+        if kind == "tree":
+            G, loss = cohort_gradient(
+                client_update, params, cohort_batch, client_weights, lr,
+                rng, strategy="scan", agg_dtype=self._agg_dtype)
+            return TreeAggregate(G), loss
+        spec = make_flat_spec(params)
+        Gs, loss = scan_cohort_gradient_flat(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            spec=spec)
+        return FlatAggregate(Gs, spec, sq_norm=None), loss
+
+    def reweightable(self, client_update, params, cohort_batch,
+                     client_weights, lr, rng):
+        # nothing is retained: aggregate() re-runs the streaming scan under
+        # the new weights; the accumulate custom VJP supplies per-client
+        # weight cotangents with g_k recomputed under jax.checkpoint
+        spec = make_flat_spec(params)
+
+        def aggregate(weights):
+            Gs, loss = scan_cohort_gradient_flat(
+                client_update, params, cohort_batch, weights, lr, rng,
+                spec=spec, loss_weights=client_weights)
+            return FlatAggregate(Gs, spec, sq_norm=None), loss
+
+        return ReweightableCohort(aggregate=aggregate)
+
+
+@register_executor("sharded")
+class ShardedExecutor(CohortExecutor):
+    """Explicitly sharded cohorts (``grad_shardings``): the per-leaf
+    weighted mean keeps its sharding constraints attached, so the handle is
+    always a tree and the per-client gradients are pre-aggregated — no
+    reweightable form (per-client hypergradients are unavailable)."""
+    name = "sharded"
+    produces = frozenset({"tree"})
+    supports_reweight = False
+
+    def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
+        if fed.cohort_strategy not in ("vmap", "scan"):
+            # this executor wraps a base strategy of cohort_gradient; a
+            # registry-only strategy name here would die on the bare
+            # ValueError deep inside the cohort scan dispatch
+            raise ValueError(
+                "the sharded cohort executor wraps a base "
+                f"cohort_strategy of 'vmap' or 'scan', got "
+                f"{fed.cohort_strategy!r}; drop grad_shardings to run a "
+                "custom executor directly")
+        self._base = fed.cohort_strategy
+        self._agg_dtype = jnp.dtype(fed.grad_agg_dtype)
+        self._spmd = spmd_axis_name
+        self._shardings = grad_shardings
+
+    def run(self, client_update, params, cohort_batch, client_weights,
+            lr, rng, *, kind):
+        assert kind == "tree", kind
+        G, loss = cohort_gradient(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            strategy=self._base, agg_dtype=self._agg_dtype,
+            spmd_axis_name=self._spmd, grad_shardings=self._shardings)
+        return TreeAggregate(G), loss

@@ -22,6 +22,14 @@ Two meta modes:
     the same scheme under client-sequential (scan) cohorts, where the
     streaming flat accumulation's custom VJP supplies the per-client
     weight cotangents without ever stacking the cohort gradients.
+
+Since the plugin-API redesign the round builder uses the strategy-agnostic
+``meta_update_through_cohort``: it differentiates through a
+:class:`repro.core.executors.ReweightableCohort` (vmap reweights its
+retained gradient stack; scan re-runs the streaming accumulation) and any
+:class:`repro.core.engines.ServerEngine` declaring the
+``through_aggregation`` capability.  The two strategy-specific functions
+below are kept as the tested reference forms and for back-compat.
 """
 from __future__ import annotations
 
@@ -51,6 +59,47 @@ def meta_update(loss_fn: Callable, params: PyTree, meta_batch: PyTree,
                        - meta_lr * gi.astype(jnp.float32)).astype(p.dtype),
         params, g)
     return new, meta_loss
+
+
+def meta_update_through_cohort(
+        loss_fn: Callable, reweightable, client_weights: jax.Array,
+        params: PyTree, opt_state: PyTree, meta_batch: PyTree,
+        ctrl: Dict[str, jax.Array], *, engine, ctrl_lr, rng=None
+        ) -> Tuple[PyTree, PyTree, jax.Array, jax.Array,
+                   Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Executor/engine-agnostic controllable aggregation — the plugin-API
+    form of the two strategy-specific functions below (which it supersedes;
+    they are kept for back-compat).
+
+    ``reweightable`` is a :class:`repro.core.executors.ReweightableCohort`
+    whose ``aggregate(weights)`` re-runs Eq. (14) under new weights
+    (differentiably); ``engine`` is a :class:`repro.core.engines.ServerEngine`
+    declaring the ``through_aggregation`` capability.  The objective takes
+    this round's server step under eff_w = n_k * exp(w_logits) and step
+    size exp(log_lr), and one SGD step with ``ctrl_lr`` on the D_meta-loss
+    hypergradients updates the controllable state.
+
+    Returns (new_params, new_opt_state, grad_norm_after_clip, client_loss,
+    new_ctrl, metrics)."""
+
+    def objective(w_logits, log_lr):
+        eff_w = client_weights.astype(jnp.float32) * jnp.exp(w_logits)
+        handle, client_loss = reweightable.aggregate(eff_w)
+        new_p, new_opt, gn = engine.apply(params, handle, opt_state,
+                                          lr=jnp.exp(log_lr))
+        l, _ = loss_fn(new_p, meta_batch, rng)
+        return l, (new_p, new_opt, gn, client_loss)
+
+    (meta_loss, (new_p, new_opt, gn, client_loss)), (d_wl, d_llr) = \
+        jax.value_and_grad(objective, argnums=(0, 1), has_aux=True)(
+            ctrl["w_logits"], ctrl["log_lr"])
+    new_ctrl = {"w_logits": ctrl["w_logits"] - ctrl_lr * d_wl,
+                "log_lr": ctrl["log_lr"] - ctrl_lr * d_llr}
+    metrics = {"meta_loss": meta_loss,
+               "ctrl_w_gnorm": jnp.sqrt(jnp.sum(d_wl * d_wl)),
+               "ctrl_lr_grad": d_llr,
+               "server_lr_eff": jnp.exp(ctrl["log_lr"])}
+    return new_p, new_opt, gn, client_loss, new_ctrl, metrics
 
 
 def meta_update_through_aggregation(

@@ -1,34 +1,44 @@
-"""One federated round as a single jit-able SPMD program (Fig. 1):
+"""One federated round as a single jit-able SPMD program (Fig. 1), built by
+COMPOSING three plugin registries instead of a hand-wired branch tree:
 
-    distribute -> local updating (UGA / FedAvg / FedProx)
-                -> unbiased aggregation -> server optimizer -> FedMeta step.
+    distribute -> local updating   (ClientAlgorithm registry,
+                                    repro.core.algorithms: uga / fedavg /
+                                    fedprox / fednova / yours)
+               -> unbiased aggregation (CohortExecutor registry,
+                                    repro.core.executors: vmap / scan /
+                                    sharded -> a uniform aggregate handle)
+               -> server update    (ServerEngine registry,
+                                    repro.core.engines: legacy_tree /
+                                    fused_flat, with declared
+                                    meta_capabilities)
+               -> FedMeta step     (core/meta.py: "post" Eq. 20, or
+                                    "through_aggregation" hypergradients if
+                                    the engine declares the capability).
 
 ``make_federated_round(model, fed)`` returns ``round_fn(state, cohort_batch,
 meta_batch, client_weights, rng) -> (state, metrics)`` suitable for
-``jax.jit`` with in/out shardings from ``repro.sharding``.
+``jax.jit`` with in/out shardings from ``repro.sharding``.  The executor
+and engine are resolved from ``fed`` (``cohort_strategy``, ``fused_update``,
+``grad_shardings``) or overridden by registry name via the ``algorithm`` /
+``executor`` / ``engine`` keywords; every supported combination is
+numerically identical to the pre-registry (PR 3) paths (equivalence-matrix
+tested).
 
-Two server-step engines (``fed.fused_update``):
-
-  * legacy (False) — tree-map stages: ``weighted_mean`` -> clip-norm scale
-    -> fp32 cast -> ``server_opt.apply`` — 5+ full-model traversals.
-  * fused (True) — the flat-buffer Pallas engine
-    (``repro.kernels.fused_update``): vmap cohorts reduce + ||G||^2 in one
-    HBM pass over the gradient stack; scan cohorts stream the reduce as one
-    FMA sweep per client (the scan carry IS the flat buffers); both finish
-    with the clip + optimizer + param write pass.
-
-``fed.meta_mode`` picks the FedMeta step: ``"post"`` (Eq. 20 parameter
-step after aggregation, default) or ``"through_aggregation"`` (fused engine
-only, vmap or scan cohorts: hypergradients of the D_meta loss through the
-server step update a controllable per-client-weights + server-lr state —
-see ``core/meta.py``).
+Partial participation / straggler dropout: ``fed.participation < 1`` draws
+a per-round Bernoulli mask over the cohort and zeroes dropped clients'
+aggregation weights — inside the existing weighted-mean / fused-accumulate
+math, so every executor and engine supports it unchanged (a w=0 client
+contributes nothing to Eq. 14 and the surviving weights renormalize).
 
 ``rounds_per_call=K`` wraps the round body in ``lax.scan`` so drivers
 compile K rounds into ONE donated program and sync metrics to host once per
 K rounds; the returned function then takes K-stacked inputs
 ``(cohort_batches (K, cohort, ...), meta_batches (K, ...),
 client_weights (K, cohort), rngs (K, ...))`` and returns K-stacked metrics.
-``rounds_per_call=1`` keeps the exact legacy signature.
+``rounds_per_call=1`` keeps the exact legacy signature.  Drivers should not
+call this module directly any more — :class:`repro.core.trainer.
+FederatedTrainer` owns the jit cache, chunked sampling, checkpoint/resume
+and history assembly.
 """
 from __future__ import annotations
 
@@ -39,45 +49,41 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import FedConfig
-from repro.core import server_opt
-from repro.core.aggregate import cohort_gradient, scan_cohort_gradient_flat
-from repro.core.client import make_client_update
-from repro.core.flat import make_flat_spec
-from repro.core.meta import (meta_update, meta_update_through_aggregation,
-                             meta_update_through_aggregation_scan)
-from repro.kernels.fused_update.ops import (fused_apply_flat,
-                                            fused_server_update,
-                                            init_flat_opt_state)
+from repro.core.algorithms import get_algorithm
+from repro.core.engines import resolve_engine, tree_global_norm
+from repro.core.executors import resolve_executor
+from repro.core.meta import meta_update, meta_update_through_cohort
 from repro.models.model import Model
 
 PyTree = Any
 
 
 def resolve_server_lr(fed: FedConfig) -> float:
-    """Effective eta_g.  FedAvg/FedProx pseudo-gradients are exact parameter
-    averages only under *plain-SGD* with a unit step, so lr is forced to 1.0
-    exactly there; every other combination — UGA (the paper's eta_g), or a
+    """Effective eta_g.  Algorithms registered with
+    ``pseudo_gradient=True`` (fedavg/fedprox) produce parameter deltas that
+    are exact parameter averages only under *plain-SGD* with a unit step,
+    so lr is forced to 1.0 exactly there; every other combination — a true-
+    gradient algorithm (UGA's eta_g, FedNova's normalized direction) or a
     FedOpt server optimizer (FedAdam/FedYogi/FedAvgM on pseudo-gradients) —
     honors ``fed.server_lr``."""
-    if fed.algorithm == "uga" or fed.server_opt != "sgd":
+    if not get_algorithm(fed.algorithm).pseudo_gradient \
+            or fed.server_opt != "sgd":
         return fed.server_lr
     return 1.0
 
 
-def init_server_state(model: Model, fed: FedConfig, key) -> PyTree:
+def init_server_state(model: Model, fed: FedConfig, key, *,
+                      engine: Optional[str] = None) -> PyTree:
     params = model.init(key)
-    if fed.fused_update:
-        opt = init_flat_opt_state(fed.server_opt, make_flat_spec(params))
-    else:
-        opt = server_opt.init_state(fed.server_opt, params)
+    eng = resolve_engine(fed, engine=engine)
     state = {
         "params": params,
-        "opt": opt,
+        "opt": eng.init_state(params),
         "round": jnp.zeros((), jnp.int32),
     }
     if fed.meta and fed.meta_mode == "through_aggregation":
         # Controllable aggregation: per-client log weight multipliers and a
-        # log server step size, meta-learned through the fused VJP.
+        # log server step size, meta-learned through the engine's VJP.
         state["ctrl"] = {
             "w_logits": jnp.zeros((fed.cohort,), jnp.float32),
             "log_lr": jnp.log(jnp.float32(resolve_server_lr(fed))),
@@ -85,43 +91,77 @@ def init_server_state(model: Model, fed: FedConfig, key) -> PyTree:
     return state
 
 
-def grad_global_norm(g: PyTree) -> jax.Array:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in jax.tree.leaves(g)))
+# back-compat name (pre-registry callers import it from here)
+grad_global_norm = tree_global_norm
+
+
+def participation_mask(rng: jax.Array, cohort: int, rate: float) -> jax.Array:
+    """Per-round straggler mask: keep each client with prob ``rate``; if
+    the draw drops the whole cohort, fall back to full participation (an
+    empty round would make Eq. 14 degenerate).  Derived from a fold of the
+    round rng so enabling participation never perturbs the client/meta rng
+    streams."""
+    keep = jax.random.bernoulli(jax.random.fold_in(rng, 0x5712A661),
+                                p=rate, shape=(cohort,))
+    keep = jnp.where(jnp.any(keep), keep, jnp.ones_like(keep))
+    return keep.astype(jnp.float32)
 
 
 def make_federated_round(model: Model, fed: FedConfig, *,
                          spmd_axis_name=None, grad_shardings=None,
-                         rounds_per_call: int = 1):
-    """``spmd_axis_name``: mesh axes the cohort dimension is sharded over
+                         rounds_per_call: int = 1,
+                         algorithm: Optional[str] = None,
+                         executor: Optional[str] = None,
+                         engine: Optional[str] = None):
+    """Compose (algorithm, executor, engine) into one round program.
+
+    ``spmd_axis_name``: mesh axes the cohort dimension is sharded over
     (client-parallel strategy) — forwarded to ``jax.vmap`` so per-client
     intermediates shard instead of replicate.  ``grad_shardings``: explicit
     NamedShardings for the stacked per-client gradients (cohort, *param) —
-    prevents GSPMD from all-gathering per-client expert gradients before the
-    weighted mean.  ``rounds_per_call``: scan K rounds into one program."""
-    client_update = make_client_update(
-        fed.algorithm, model.loss, local_steps=fed.local_steps,
+    selects the sharded executor, which keeps the per-leaf weighted mean so
+    GSPMD never all-gathers the stack.  ``rounds_per_call``: scan K rounds
+    into one program.  ``algorithm`` / ``executor`` / ``engine``: registry
+    names overriding the ``fed``-derived defaults (``fed.algorithm``,
+    ``fed.cohort_strategy`` + shardings, ``fed.fused_update``)."""
+    alg = get_algorithm(algorithm if algorithm is not None
+                        else fed.algorithm)
+    client_update = alg.build(
+        model.loss, local_steps=fed.local_steps,
         local_epochs=fed.local_epochs, prox_mu=fed.prox_mu,
         remat=fed.remat_local_steps)
-    agg_dtype = jnp.dtype(fed.grad_agg_dtype)
+    exe = resolve_executor(fed, spmd_axis_name=spmd_axis_name,
+                           grad_shardings=grad_shardings, executor=executor)
+    eng = resolve_engine(fed, engine=engine)
+
+    kinds = exe.produces & eng.accepts
+    if not kinds:
+        raise ValueError(
+            f"cohort executor {exe.name!r} produces {sorted(exe.produces)} "
+            f"but server engine {eng.name!r} accepts {sorted(eng.accepts)}: "
+            "no common aggregate-handle kind")
+    kind = eng.preferred if eng.preferred in kinds else next(iter(kinds))
+
     server_lr = resolve_server_lr(fed)
     through_agg = fed.meta and fed.meta_mode == "through_aggregation"
-    if through_agg and not fed.fused_update:
-        # FedConfig validates this too, but guard here for configs built
-        # around __post_init__ (python -O, object.__setattr__): the legacy
-        # tree-map branch has no ctrl hypergradient path, so tracing would
-        # die on an undefined new_ctrl.
+    if through_agg and "through_aggregation" not in eng.meta_capabilities:
+        # FedConfig validates this too, but re-check against the resolved
+        # engine for configs built around __post_init__ (python -O,
+        # object.__setattr__) and for registry-selected engines: without
+        # the capability there is no ctrl hypergradient path.
         raise ValueError(
-            "meta_mode='through_aggregation' requires fused_update=True: "
-            "the hypergradients flow through the fused engine's custom "
-            "VJP; the legacy tree-map server step cannot update the "
-            "'ctrl' slot. Set FedConfig(fused_update=True) or use "
-            "meta_mode='post'.")
-    if through_agg and grad_shardings is not None:
+            f"meta_mode='through_aggregation' needs a server engine "
+            f"declaring the 'through_aggregation' capability, but "
+            f"{eng.name!r} declares {sorted(eng.meta_capabilities)}: the "
+            "hypergradients flow through the fused engine's custom VJP. "
+            "Set FedConfig(fused_update=True) (the fused_flat engine) or "
+            "use meta_mode='post'.")
+    if through_agg and not exe.supports_reweight:
         raise ValueError(
-            "meta_mode='through_aggregation' is unsupported with "
-            "grad_shardings: sharded cohorts pre-aggregate per leaf, so "
-            "per-client weight hypergradients are unavailable. Drop "
+            f"meta_mode='through_aggregation' needs a cohort executor that "
+            f"supports reweightable aggregation, but {exe.name!r} does "
+            "not: sharded cohorts (grad_shardings) pre-aggregate per leaf, "
+            "so per-client weight hypergradients are unavailable. Drop "
             "grad_shardings (vmap/scan cohorts both support "
             "through_aggregation) or use meta_mode='post'.")
 
@@ -132,93 +172,38 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         r = state["round"].astype(jnp.float32)
         lr_c = fed.client_lr * (fed.lr_decay ** r)
 
+        # NOTE: the 2-way split below is load-bearing for reproducibility —
+        # the participation mask folds out of ``rng`` separately so that
+        # participation=1 configs keep the exact historical rng streams.
         rng_c, rng_m = jax.random.split(rng)
+        part_metrics = {}
+        if fed.participation < 1.0:
+            mask = participation_mask(rng, client_weights.shape[0],
+                                      fed.participation)
+            client_weights = client_weights * mask
+            part_metrics = {"participants": jnp.sum(mask)}
 
-        if fed.fused_update:
-            meta_metrics = {}
-            if fed.cohort_strategy == "scan" and grad_shardings is None:
-                # Client-sequential cohort fusion: the scan carry is the
-                # flat (rows, LANES) fp32 dtype-group buffers themselves —
-                # K streaming Pallas FMAs (one per client), then the same
-                # clip+optimizer+write pass.  No pytree-carry tree-maps,
-                # no flatten round-trip of the aggregate.
-                if through_agg:
-                    (new_params, opt_state, gn_post, client_loss,
-                     new_ctrl, meta_metrics) = \
-                        meta_update_through_aggregation_scan(
-                            model.loss, client_update, params, cohort_batch,
-                            client_weights, lr_c, rng_c, state["opt"],
-                            meta_batch, state["ctrl"], opt=fed.server_opt,
-                            clip_norm=fed.clip_norm,
-                            momentum=fed.server_momentum,
-                            ctrl_lr=fed.ctrl_lr, rng=rng_m)
-                else:
-                    spec = make_flat_spec(params)
-                    G_groups, client_loss = scan_cohort_gradient_flat(
-                        client_update, params, cohort_batch, client_weights,
-                        lr_c, rng_c, spec=spec)
-                    new_params, opt_state, gn_post = fused_apply_flat(
-                        params, G_groups, state["opt"], opt=fed.server_opt,
-                        lr=server_lr, clip_norm=fed.clip_norm,
-                        momentum=fed.server_momentum, spec=spec)
-            else:
-                if fed.cohort_strategy == "vmap" and grad_shardings is None:
-                    g_stack, client_loss = cohort_gradient(
-                        client_update, params, cohort_batch, client_weights,
-                        lr_c, rng_c, strategy="vmap", agg_dtype=agg_dtype,
-                        spmd_axis_name=spmd_axis_name, aggregate=False)
-                    w_fused = client_weights
-                else:
-                    # Sharded cohorts (grad_shardings) keep the per-leaf
-                    # weighted mean so its sharding constraints stay
-                    # attached — the flat stack can't express them yet and
-                    # GSPMD would all-gather the (cohort, *model) stack
-                    # (the 37x HBM blow-up).  The fused engine still does
-                    # clip+optimizer+write over the result.
-                    G, client_loss = cohort_gradient(
-                        client_update, params, cohort_batch, client_weights,
-                        lr_c, rng_c, strategy=fed.cohort_strategy,
-                        agg_dtype=agg_dtype, spmd_axis_name=spmd_axis_name,
-                        grad_shardings=grad_shardings)
-                    g_stack = jax.tree.map(lambda x: x[None], G)
-                    w_fused = jnp.ones((1,), jnp.float32)
-                if through_agg:
-                    new_params, opt_state, gn_post, new_ctrl, meta_metrics \
-                        = meta_update_through_aggregation(
-                            model.loss, params, g_stack, w_fused,
-                            state["opt"], meta_batch, state["ctrl"],
-                            opt=fed.server_opt, clip_norm=fed.clip_norm,
-                            momentum=fed.server_momentum,
-                            ctrl_lr=fed.ctrl_lr, rng=rng_m)
-                else:
-                    new_params, opt_state, gn_post = fused_server_update(
-                        params, g_stack, w_fused, state["opt"],
-                        opt=fed.server_opt, lr=server_lr,
-                        clip_norm=fed.clip_norm,
-                        momentum=fed.server_momentum)
-            # one metrics assembly for every fused arm: rounds_per_call
-            # chunking (lax.scan) needs identical keys per config, so the
-            # strategy/mode branches must not each grow their own dict
-            metrics = {"client_loss": client_loss, "grad_norm": gn_post,
-                       **meta_metrics}
+        meta_metrics = {}
+        if through_agg:
+            rw = exe.reweightable(client_update, params, cohort_batch,
+                                  client_weights, lr_c, rng_c)
+            (new_params, opt_state, gn_post, client_loss, new_ctrl,
+             meta_metrics) = meta_update_through_cohort(
+                model.loss, rw, client_weights, params, state["opt"],
+                meta_batch, state["ctrl"], engine=eng,
+                ctrl_lr=fed.ctrl_lr, rng=rng_m)
         else:
-            G, client_loss = cohort_gradient(
+            handle, client_loss = exe.run(
                 client_update, params, cohort_batch, client_weights, lr_c,
-                rng_c, strategy=fed.cohort_strategy, agg_dtype=agg_dtype,
-                spmd_axis_name=spmd_axis_name, grad_shardings=grad_shardings)
+                rng_c, kind=kind)
+            new_params, opt_state, gn_post = eng.apply(
+                params, handle, state["opt"], lr=server_lr)
 
-            if fed.clip_norm > 0:
-                gn = grad_global_norm(G)
-                scale = jnp.minimum(1.0,
-                                    fed.clip_norm / jnp.maximum(gn, 1e-9))
-                G = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
-                                            ).astype(g.dtype), G)
-
-            new_params, opt_state = server_opt.apply(
-                fed.server_opt, state["opt"], params, G, server_lr,
-                momentum=fed.server_momentum)
-            metrics = {"client_loss": client_loss,
-                       "grad_norm": grad_global_norm(G)}
+        # one metrics assembly for every arm: rounds_per_call chunking
+        # (lax.scan) needs identical keys per config, so the executor/
+        # engine/mode combinations must not each grow their own dict
+        metrics = {"client_loss": client_loss, "grad_norm": gn_post,
+                   **part_metrics, **meta_metrics}
 
         if fed.meta and not through_agg:
             lr_m = fed.meta_lr * (fed.lr_decay ** r)

@@ -1,0 +1,156 @@
+"""FederatedTrainer — the one driver loop every entry point shares.
+
+Before this facade, ``launch/train.py``, ``benchmarks/common.py`` and the
+examples each re-implemented the same loop: a :class:`~repro.core.round.
+RoundFnCache` of jitted round programs, per-chunk host sampling,
+``stack_round_inputs`` for ``rounds_per_call`` chunking, checkpoint/resume
+of the full server state, and per-round history assembly — with separate
+``k == 1`` / ``k > 1`` branches in each copy.  The trainer owns all of it
+once:
+
+    trainer = FederatedTrainer(model, fed, rounds_per_call=4, seed=0)
+    trainer.restore(path)                      # optional resume
+    history = trainer.run(data, rounds=100, cohort=8, batch=32)
+    trainer.save(path)
+
+``run`` samples each chunk from a :class:`~repro.data.pipeline.
+FederatedData`, dispatches one donated program per chunk (metrics sync to
+host once per chunk), and returns one record per round
+(``{"round": r, **metrics}``).  Hooks:
+
+  * ``sample_meta(data, round_idx, meta_batch, sample)`` — override D_meta
+    sampling (default: ``data.sample_meta`` when ``fed.meta``, else None so
+    no meta batch is ever shipped);
+  * ``on_records(recs, trainer)`` — called after every chunk with that
+    chunk's records (eval scheduling, early stopping, custom logging).
+
+Plugin selection (``algorithm`` / ``executor`` / ``engine`` registry names)
+passes through to :func:`repro.core.round.make_federated_round`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore as ckpt_restore
+from repro.checkpoint import save as ckpt_save
+from repro.configs.base import FedConfig
+from repro.core.round import (RoundFnCache, init_server_state,
+                              stack_round_inputs)
+from repro.data.pipeline import FederatedData
+from repro.models.model import Model
+
+PyTree = Any
+
+__all__ = ["FederatedTrainer"]
+
+
+class FederatedTrainer:
+    """Owns server state + jitted round programs + the chunked host loop."""
+
+    def __init__(self, model: Model, fed: FedConfig, *,
+                 rounds_per_call: int = 1, donate: bool = True,
+                 seed: int = 0, key: Optional[jax.Array] = None,
+                 engine: Optional[str] = None, **round_kwargs):
+        self.model = model
+        self.fed = fed
+        self.rounds_per_call = max(int(rounds_per_call), 1)
+        if engine is not None:
+            round_kwargs["engine"] = engine
+        self._cache = RoundFnCache(model, fed, donate=donate,
+                                   **round_kwargs)
+        self.key = key if key is not None else jax.random.PRNGKey(seed)
+        self.state = init_server_state(model, fed, self.key, engine=engine)
+        self.history: List[Dict[str, float]] = []
+
+    # ---- state management -------------------------------------------------
+    @property
+    def round(self) -> int:
+        """Host-side round counter (syncs the device scalar)."""
+        return int(self.state["round"])
+
+    def save(self, path: str, extra: Optional[dict] = None) -> None:
+        """Full server state — params, optimizer state (incl. the fused
+        engine's tuple-structured flat buffers), the controllable-weights
+        slot when present, and the round counter — so :meth:`restore`
+        continues mid-run without losing FedOpt momentum or meta-learned
+        weights."""
+        ckpt_save(path, self.state, extra=extra or {})
+
+    def restore(self, path: str) -> dict:
+        """Resume from a checkpoint written by :meth:`save`; returns the
+        checkpoint's ``extra`` metadata."""
+        self.state, extra = ckpt_restore(path, self.state)
+        return extra
+
+    # ---- the driver loop --------------------------------------------------
+    def run(self, data: FederatedData, *, rounds: int, cohort: int,
+            batch: int, meta_batch: int = 32, share: Optional[bool] = None,
+            sample_meta: Optional[Callable] = None,
+            on_records: Optional[Callable] = None, log_every: int = 0,
+            log_fn: Callable = print) -> List[Dict[str, float]]:
+        """Train from the current round counter up to ``rounds`` total.
+        Returns this call's per-round records (also appended to
+        ``self.history``)."""
+        share = self.fed.share if share is None else share
+        t0 = time.time()
+        run_history: List[Dict[str, float]] = []
+        r = self.round
+        while r < rounds:
+            k = min(self.rounds_per_call, rounds - r)
+            samples = [data.sample_round(r + j, cohort=cohort, batch=batch,
+                                         share=share)
+                       for j in range(k)]
+            metas = [self._sample_meta(sample_meta, data, r + j, meta_batch,
+                                       samples[j])
+                     for j in range(k)]
+            rngs = [jax.random.fold_in(self.key, r + j) for j in range(k)]
+            metrics = self._dispatch(samples, metas, rngs)
+
+            # THE record assembly — every driver shares this one
+            recs = [{name: float(v[j]) for name, v in metrics.items()}
+                    for j in range(k)]
+            for j, rec in enumerate(recs):
+                rec["round"] = r + j
+                run_history.append(rec)
+                self.history.append(rec)
+                if log_every and ((r + j) % log_every == 0
+                                  or r + j == rounds - 1):
+                    log_fn(f"[train] round {r + j:4d} " +
+                           " ".join(f"{name}={v:.4f}"
+                                    for name, v in rec.items()
+                                    if name != "round") +
+                           f" ({time.time() - t0:.1f}s)")
+            if on_records is not None:
+                on_records(recs, self)
+            r += k
+        return run_history
+
+    def _sample_meta(self, sample_meta, data, round_idx, meta_batch, sample):
+        if sample_meta is not None:
+            return sample_meta(data, round_idx, meta_batch, sample)
+        # No FedMeta step -> no D_meta sampling: the round_fn never touches
+        # meta_batch when fed.meta is False, so ship None (an empty pytree
+        # threads through stack_round_inputs and jit untouched)
+        return data.sample_meta(round_idx, meta_batch) if self.fed.meta \
+            else None
+
+    def _dispatch(self, samples, metas, rngs) -> Dict[str, jax.Array]:
+        """One donated program for the chunk; metrics come back with a
+        leading K axis for k == 1 too, so record assembly exists once."""
+        k = len(samples)
+        if k == 1:
+            self.state, metrics = self._cache(1)(
+                self.state,
+                jax.tree.map(jnp.asarray, samples[0]["cohort_batch"]),
+                jax.tree.map(jnp.asarray, metas[0]),
+                jnp.asarray(samples[0]["client_weights"]), rngs[0])
+            return {name: v[None] for name, v in metrics.items()}
+        cb, mb, wts, rks = stack_round_inputs(
+            [s["cohort_batch"] for s in samples], metas,
+            [s["client_weights"] for s in samples], rngs)
+        self.state, metrics = self._cache(k)(self.state, cb, mb, wts, rks)
+        return metrics

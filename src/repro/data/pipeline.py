@@ -38,6 +38,14 @@ class FederatedData:
                      share: bool = False, share_fraction: float = 0.5
                      ) -> Dict:
         """Returns {'cohort_batch', 'client_weights', 'clients'}."""
+        if cohort > self.num_clients:
+            # numpy's replace=False error ("Cannot take a larger sample...")
+            # names neither quantity; fail with both numbers and the fix
+            raise ValueError(
+                f"sample_round(cohort={cohort}) cannot draw that many "
+                f"distinct clients from num_clients={self.num_clients}; "
+                "lower the cohort (C*K) or partition the data into more "
+                "clients")
         rng = np.random.default_rng((self.seed, round_idx))
         clients = rng.choice(self.num_clients, size=cohort, replace=False)
         batches, weights = [], []

@@ -174,6 +174,51 @@ def _upd_vjp(opt: str, momentum: float, b1: float, b2: float, eps: float,
     return upd
 
 
+def flat_weighted_aggregate(spec: FlatSpec, grad_stack: PyTree,
+                            client_weights: jax.Array, *,
+                            use_ref: bool = False,
+                            interpret: Optional[bool] = None
+                            ) -> Tuple[list, jax.Array]:
+    """Pass 1 alone: normalize ``client_weights``, flatten the stacked
+    per-client gradients and run the differentiable aggregate kernel per
+    dtype group.  Returns (G_groups, ssq) where ``ssq = ||G||^2`` summed
+    over groups — exactly the interior of :func:`fused_server_update`, so
+    cohort executors can produce the Eq. (14) flat weighted mean as a
+    uniform handle and leave pass 2 to the server engine."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    w = client_weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    g_groups = flat_mod.flatten_stacked(spec, grad_stack)
+    agg = _agg_vjp(use_ref, interpret)
+    Gs, ssq = [], jnp.float32(0.0)
+    for g_stack in g_groups:
+        G, s = agg(g_stack, w)
+        Gs.append(G)
+        ssq = ssq + s
+    return Gs, ssq
+
+
+def flat_apply_groups(spec: FlatSpec, G_groups, gn, params: PyTree,
+                      opt_state: PyTree, *, opt: str, lr,
+                      clip_norm: float = 0.0, momentum: float = 0.9,
+                      b1: float = 0.9, b2: float = 0.99, eps: float = 1e-8,
+                      use_ref: bool = False,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[PyTree, PyTree, jax.Array]:
+    """Pass 2 alone (public form of the shared ``_apply_groups``): clip
+    scale + optimizer + param write over aggregated flat buffers, with the
+    pre-clip global norm ``gn`` supplied by the caller (the aggregate
+    kernel's ssq, or :func:`repro.core.flat.flat_sq_norm` for streamed
+    accumulations).  Returns (new_params, new_opt_state, gn_after_clip)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _apply_groups(spec, list(G_groups), gn, params, opt_state,
+                         opt=opt, lr=lr, clip_norm=clip_norm,
+                         momentum=momentum, b1=b1, b2=b2, eps=eps,
+                         use_ref=use_ref, interpret=interpret)
+
+
 def fused_server_update(params: PyTree, grad_stack: PyTree,
                         client_weights: jax.Array, opt_state: PyTree, *,
                         opt: str = "sgd", lr, clip_norm: float = 0.0,
@@ -194,18 +239,8 @@ def fused_server_update(params: PyTree, grad_stack: PyTree,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    w = client_weights.astype(jnp.float32)
-    w = w / jnp.maximum(jnp.sum(w), 1e-30)
-
-    g_groups = flat_mod.flatten_stacked(spec, grad_stack)
-    agg = _agg_vjp(use_ref, interpret)
-
-    # ---- pass 1: weighted reduce + sum-of-squares per dtype group --------
-    Gs, ssq = [], jnp.float32(0.0)
-    for g_stack in g_groups:
-        G, s = agg(g_stack, w)
-        Gs.append(G)
-        ssq = ssq + s
+    Gs, ssq = flat_weighted_aggregate(spec, grad_stack, client_weights,
+                                      use_ref=use_ref, interpret=interpret)
 
     return _apply_groups(spec, Gs, jnp.sqrt(ssq), params, opt_state,
                          opt=opt, lr=lr, clip_norm=clip_norm,

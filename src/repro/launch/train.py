@@ -3,7 +3,19 @@
 Runs REAL federated rounds (host data pipeline -> jitted round_fn) on
 whatever devices exist — a debug mesh on CPU, the production mesh on a pod.
 This is the driver behind ``examples/federated_lm.py`` and the paper-claim
-benchmarks.
+benchmarks.  The loop itself lives in
+:class:`repro.core.trainer.FederatedTrainer`; this module only assembles
+(model, FedConfig, FederatedData) from CLI flags.
+
+``--algorithm`` accepts ANY name in the ClientAlgorithm registry
+(``repro.core.algorithms``) — the built-ins (uga / fedavg / fedprox /
+fednova) plus user plugins: ``--plugin my_module`` imports ``my_module``
+(repeatable, importable from PYTHONPATH) BEFORE the remaining flags are
+parsed, so a one-file ``register_algorithm`` / ``register_executor`` /
+``register_engine`` plugin is selectable by name in the same invocation:
+
+  PYTHONPATH=src:. python -m repro.launch.train --plugin myalgo \
+      --algorithm myalgo --arch smollm-360m-smoke --rounds 3 ...
 
 Usage (CPU-scale example):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m-smoke \
@@ -12,25 +24,19 @@ Usage (CPU-scale example):
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
-import time
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sharding as shd
-from repro.checkpoint import restore as ckpt_restore
-from repro.checkpoint import save as ckpt_save
 from repro.configs import FedConfig, get_arch
-from repro.core import (init_server_state, RoundFnCache,
-                        stack_round_inputs)
-from repro.data.partition import partition_iid, partition_dirichlet
+from repro.core import FederatedTrainer, available_algorithms
+from repro.data.partition import partition_iid
 from repro.data.pipeline import FederatedData
 from repro.data.synthetic import synthetic_tokens
-from repro.launch.mesh import make_debug_mesh
 from repro.models.model import build_model
 
 
@@ -61,6 +67,7 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  server_lr: Optional[float] = None,
                  meta_lr: Optional[float] = None, server_opt: str = "sgd",
                  meta_mode: str = "post", ctrl_lr: float = 0.01,
+                 participation: float = 1.0,
                  num_clients: int = 32, examples: int = 2048,
                  iid: bool = False, seed: int = 0, log_every: int = 10,
                  ckpt_path: Optional[str] = None,
@@ -68,9 +75,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  dtype=jnp.float32, fused: bool = False,
                  rounds_per_call: int = 1):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
-    and metrics sync to host once per K rounds (the per-round ``float()``
-    sync was a fixed ~ms tax per round).  ``fused``: flat-buffer Pallas
-    server step (see kernels/fused_update).  ``resume``: path of a
+    and metrics sync to host once per K rounds.  ``fused``: flat-buffer
+    Pallas server engine (see kernels/fused_update).  ``resume``: path of a
     full-server-state checkpoint written by ``ckpt_path`` — training
     continues from its round counter toward ``rounds`` total."""
     cfg = get_arch(arch)
@@ -82,80 +88,50 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         server_lr=server_lr if server_lr is not None else client_lr,
         meta_lr=meta_lr if meta_lr is not None else client_lr,
         server_opt=server_opt, meta_mode=meta_mode, ctrl_lr=ctrl_lr,
+        participation=participation,
         cohort_strategy=strategy, lr_decay=0.992, fused_update=fused)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
                                     seed=seed)
-    get_round_fn = RoundFnCache(model, fed)
-    key = jax.random.PRNGKey(seed)
-    state = init_server_state(model, fed, key)
-    start_round = 0
+    trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
+                               seed=seed)
     if resume:
-        state, extra = ckpt_restore(resume, state)
-        start_round = int(state["round"])
-        print(f"[train] resumed {resume} at round {start_round} "
+        extra = trainer.restore(resume)
+        print(f"[train] resumed {resume} at round {trainer.round} "
               f"(saved by arch={extra.get('arch')})")
-    history = []
-    t0 = time.time()
     meta_bs = min(client_batch * 2, 32)
-    r = start_round
-    while r < rounds:
-        k = min(max(rounds_per_call, 1), rounds - r)
-        samples = [data.sample_round(r + j, cohort=cohort,
-                                     batch=client_batch, share=share)
-                   for j in range(k)]
-        # No FedMeta step -> no D_meta sampling: the round_fn never touches
-        # meta_batch when fed.meta is False, so ship None (an empty pytree
-        # threads through stack_round_inputs and jit untouched) instead of
-        # sampling+stacking host batches every round — and sample_meta
-        # would assert outright when no meta set exists.
-        metas = [data.sample_meta(r + j, batch=meta_bs) if fed.meta else None
-                 for j in range(k)]
-        rngs = [jax.random.fold_in(key, r + j) for j in range(k)]
-        if k == 1:
-            state, metrics = get_round_fn(1)(
-                state, jax.tree.map(jnp.asarray, samples[0]["cohort_batch"]),
-                jax.tree.map(jnp.asarray, metas[0]),
-                jnp.asarray(samples[0]["client_weights"]), rngs[0])
-            recs = [{kk: float(v) for kk, v in metrics.items()}]
-        else:
-            cb, mb, wts, rks = stack_round_inputs(
-                [s["cohort_batch"] for s in samples], metas,
-                [s["client_weights"] for s in samples], rngs)
-            state, metrics = get_round_fn(k)(state, cb, mb, wts, rks)
-            recs = [{kk: float(v[j]) for kk, v in metrics.items()}
-                    for j in range(k)]
-        for j, rec in enumerate(recs):
-            rec["round"] = r + j
-            history.append(rec)
-            if log_every and ((r + j) % log_every == 0
-                              or r + j == rounds - 1):
-                print(f"[train] round {r + j:4d} " +
-                      " ".join(f"{kk}={v:.4f}" for kk, v in rec.items()
-                               if kk != "round") +
-                      f" ({time.time()-t0:.1f}s)")
-        r += k
+    history = trainer.run(data, rounds=rounds, cohort=cohort,
+                          batch=client_batch, meta_batch=meta_bs,
+                          share=share, log_every=log_every)
     if ckpt_path:
-        # Full server state — params, optimizer state (incl. the fused
-        # engine's tuple-structured flat buffers), the controllable-weights
-        # slot when present, and the round counter — so --resume restarts
-        # mid-run without losing FedOpt momentum or meta-learned weights.
-        ckpt_save(ckpt_path, state,
-                  extra={"arch": arch, "rounds": rounds,
-                         "algorithm": algorithm})
+        trainer.save(ckpt_path, extra={"arch": arch, "rounds": rounds,
+                                       "algorithm": algorithm})
         print(f"[train] saved server state to {ckpt_path}")
-    return state, history
+    return trainer.state, history
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # --plugin modules must import (and hit the registries) before the
+    # main parser freezes --algorithm's choices
+    pre = argparse.ArgumentParser(add_help=False)
+    pre.add_argument("--plugin", action="append", default=[],
+                     help="module to import before parsing the remaining "
+                          "flags — its register_algorithm/executor/engine "
+                          "calls make the names selectable (repeatable)")
+    plug_args, _ = pre.parse_known_args()
+    for mod in plug_args.plugin:
+        importlib.import_module(mod)
+
+    ap = argparse.ArgumentParser(parents=[pre])
     ap.add_argument("--arch", required=True)
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--cohort", type=int, default=4)
     ap.add_argument("--client-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--algorithm", default="uga",
-                    choices=["uga", "fedavg", "fedprox"])
+                    choices=list(available_algorithms()),
+                    help="any registered client algorithm "
+                         "(repro.core.algorithms)")
     ap.add_argument("--meta", action="store_true")
     ap.add_argument("--no-meta", dest="meta", action="store_false")
     ap.set_defaults(meta=True)
@@ -165,24 +141,32 @@ def main():
                     help="E: passes over the local microbatch schedule")
     ap.add_argument("--client-lr", type=float, default=0.01)
     ap.add_argument("--server-lr", type=float, default=None,
-                    help="eta_g (default: --client-lr); applied for UGA and "
-                         "any non-SGD server optimizer")
+                    help="eta_g (default: --client-lr); applied for "
+                         "true-gradient algorithms (uga/fednova) and any "
+                         "non-SGD server optimizer")
     ap.add_argument("--meta-lr", type=float, default=None,
                     help="eta_meta (default: --client-lr)")
     ap.add_argument("--server-opt", default="sgd",
                     choices=["sgd", "sgdm", "adam", "yogi"])
-    ap.add_argument("--strategy", default="vmap", choices=["vmap", "scan"],
-                    help="cohort execution: client-parallel vmap or "
-                         "client-sequential scan")
+    ap.add_argument("--strategy", default="vmap",
+                    help="cohort executor: client-parallel vmap, "
+                         "client-sequential scan, or any registered "
+                         "executor name")
     ap.add_argument("--meta-mode", default="post",
                     choices=["post", "through_aggregation"],
                     help="FedMeta step: post-aggregation parameter step, or "
-                         "hypergradients through the fused aggregation "
-                         "(requires --fused)")
+                         "hypergradients through the aggregation (needs an "
+                         "engine with the capability, i.e. --fused)")
     ap.add_argument("--ctrl-lr", type=float, default=0.01,
                     help="controllable-weights step size "
                          "(--meta-mode through_aggregation)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="<1: straggler dropout — per-round probability a "
+                         "sampled client reports; dropped clients' weights "
+                         "are zeroed inside the aggregation")
     ap.add_argument("--num-clients", type=int, default=32)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print a history record every N rounds (0: quiet)")
     ap.add_argument("--examples", type=int, default=2048)
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -191,7 +175,7 @@ def main():
                     help="checkpoint written by --ckpt to continue from")
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--fused", action="store_true",
-                    help="fused flat-buffer Pallas server step")
+                    help="fused flat-buffer Pallas server engine")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="scan K rounds into one compiled program")
     args = ap.parse_args()
@@ -203,7 +187,9 @@ def main():
         client_lr=args.client_lr, server_lr=args.server_lr,
         meta_lr=args.meta_lr, server_opt=args.server_opt,
         meta_mode=args.meta_mode, ctrl_lr=args.ctrl_lr,
+        participation=args.participation,
         strategy=args.strategy, num_clients=args.num_clients,
+        log_every=args.log_every,
         examples=args.examples, iid=args.iid, seed=args.seed,
         ckpt_path=args.ckpt, resume=args.resume, fused=args.fused,
         rounds_per_call=args.rounds_per_call)
