@@ -1,0 +1,256 @@
+"""GradientCodec plugin registry — the communication-compression uplink.
+
+The paper motivates FedAvg by the "potential heavy communication costs" of
+shipping raw updates; this registry models that uplink.  A
+:class:`GradientCodec` encodes ONE client's gradient — per dtype group, in
+the fused engine's flat ``(rows, LANES)`` fp32 layout
+(:mod:`repro.core.flat`) — into a transport payload, and decodes it on the
+server side before the Eq. (14) aggregation.  The round builder threads
+codecs through the cohort executors (:meth:`repro.core.executors.
+CohortExecutor.run_coded`), so every client algorithm composes with every
+codec unchanged.
+
+Built-ins (registered like algorithms/executors/engines, via the shared
+``core/registry.py`` helper):
+
+  * ``none``     — identity / no codec (the round bypasses the comm stage
+    entirely, so it is bit-identical to a codec-free build);
+  * ``int8``     — symmetric per-group int8 quantization with one fp32
+    scale ``amax / 127`` per group (~4x uplink reduction);
+  * ``sign1bit`` — signSGD-style 1-bit sign + one per-group magnitude
+    ``mean |g|`` (~32x);
+  * ``topk``     — magnitude sparsification: the ``FedConfig.topk_ratio``
+    fraction of largest-|g| elements ships as (value, index) pairs.
+
+Error feedback (``FedConfig.error_feedback``): each client keeps the
+compression residual ``e = (g + residual) - decode(encode(g + residual))``
+in the server state's ``state["comm"]`` slot (a per-client buffer stack,
+threaded through checkpoints like ``ctrl``), so quantization error
+re-enters the next round's transmission instead of being lost — the
+standard EF-SGD memory that restores convergence under aggressive codecs.
+
+Hot-path kernels live in :mod:`repro.kernels.comm` (Pallas pack/unpack +
+decode-fused FMA, with jnp ``ref`` oracles); ``topk`` is pure jnp — its
+gather/scatter transport does not map onto the flat-tile HBM sweeps the
+kernel family is built from.
+
+Register a new codec with :func:`register_codec`; the factory receives the
+:class:`~repro.configs.base.FedConfig`.  Lossy codecs are *post*-meta-mode
+only for now — a straight-through/differentiable codec for
+``through_aggregation`` is a ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flat import GroupSpec, LANES
+from repro.core.registry import Registry
+from repro.kernels.comm import ops as C
+
+PyTree = Any
+
+__all__ = ["GradientCodec", "register_codec", "get_codec",
+           "available_codecs", "resolve_codec"]
+
+
+class GradientCodec:
+    """Protocol.  All methods operate on ONE dtype group at a time;
+    payloads are pytrees of arrays with static shapes derived from the
+    :class:`~repro.core.flat.GroupSpec`, so they scan/jit cleanly."""
+    name: str = "?"
+    lossy: bool = True          # False: decode(encode(g)) == g exactly
+
+    def encode(self, group: GroupSpec, g: jax.Array) -> PyTree:
+        """(rows, LANES) fp32 gradient -> transport payload."""
+        raise NotImplementedError
+
+    def decode(self, group: GroupSpec, payload: PyTree) -> jax.Array:
+        """Transport payload -> (rows, LANES) fp32 reconstruction.  Pad
+        elements (flat index >= group.size) must decode to exact zero."""
+        raise NotImplementedError
+
+    def encode_ef(self, group: GroupSpec, e: jax.Array
+                  ) -> Tuple[PyTree, jax.Array]:
+        """Encode the error-compensated gradient ``e = g + residual`` and
+        return (payload, new_residual = e - decode(payload)).  Codecs with
+        a fused quantize+error kernel override this to keep EF at one
+        sweep; the default costs one extra decode."""
+        payload = self.encode(group, e)
+        return payload, e - self.decode(group, payload)
+
+    def decode_fma(self, group: GroupSpec, acc: jax.Array, payload: PyTree,
+                   w) -> jax.Array:
+        """Server-side streaming aggregate: ``acc + w * decode(payload)``
+        (w = the client's normalized Eq. 14 weight).  Codecs with a
+        decode-fused FMA kernel override this."""
+        return acc + jnp.asarray(w, jnp.float32) * self.decode(group, payload)
+
+    def payload_bytes(self, group: GroupSpec) -> int:
+        """Uplink bytes one client ships for this group (static python
+        int).  Measured on the transported information — group.size true
+        elements plus per-group scalars — not the padded buffer layout."""
+        raise NotImplementedError
+
+
+_CODECS = Registry("gradient codec", "repro.comm.codecs.register_codec")
+
+
+def register_codec(name: str):
+    """Decorator registering a codec factory ``factory(fed) -> codec``."""
+    def deco(factory: Callable) -> Callable:
+        _CODECS.register(name, factory)
+        return factory
+    return deco
+
+
+def get_codec(name: str) -> Callable:
+    return _CODECS.get(name)
+
+
+def available_codecs() -> tuple:
+    return _CODECS.names()
+
+
+def resolve_codec(fed, *, codec: Optional[str] = None) -> GradientCodec:
+    """An explicit registry name wins, then ``fed.codec`` (default
+    'none')."""
+    if codec is None:
+        codec = getattr(fed, "codec", "none")
+    return get_codec(codec)(fed)
+
+
+# ---------------------------------------------------------------------------
+# built-in codecs
+# ---------------------------------------------------------------------------
+@register_codec("none")
+class NoneCodec(GradientCodec):
+    """Identity transport: fp32 ships as-is.  ``lossy = False`` makes the
+    round builder bypass the comm stage entirely, so 'none' is bit-
+    identical to a codec-free round on every executor/engine."""
+    name = "none"
+    lossy = False
+
+    def __init__(self, fed=None):
+        del fed
+
+    def encode(self, group, g):
+        return g
+
+    def decode(self, group, payload):
+        return payload
+
+    def payload_bytes(self, group):
+        return 4 * group.size
+
+
+@register_codec("int8")
+class Int8Codec(GradientCodec):
+    """Symmetric per-group int8: one fp32 scale ``amax / 127`` per dtype
+    group, round-to-nearest quantization (``kernels/comm``: quantize and
+    EF-residual in one sweep, decode fused into the aggregate FMA)."""
+    name = "int8"
+    lossy = True
+
+    def __init__(self, fed=None, *, use_ref: bool = False,
+                 interpret: Optional[bool] = None):
+        del fed
+        self._kw = dict(use_ref=use_ref, interpret=interpret)
+
+    def _scale(self, g):
+        amax = jnp.max(jnp.abs(g))
+        return jnp.maximum(amax, 1e-30) / 127.0
+
+    def encode(self, group, g):
+        scale = self._scale(g)
+        q = C.quantize_i8(g, 1.0 / scale, scale, **self._kw)
+        return {"q": q, "scale": scale}
+
+    def encode_ef(self, group, e):
+        scale = self._scale(e)
+        q, err = C.quantize_i8(e, 1.0 / scale, scale, with_error=True,
+                               **self._kw)
+        return {"q": q, "scale": scale}, err
+
+    def decode(self, group, payload):
+        return payload["q"].astype(jnp.float32) * payload["scale"]
+
+    def decode_fma(self, group, acc, payload, w):
+        return C.dequant_i8_fma(acc, payload["q"], payload["scale"] * w,
+                                **self._kw)
+
+    def payload_bytes(self, group):
+        return group.size + 4                       # int8 elements + scale
+
+
+@register_codec("sign1bit")
+class Sign1BitCodec(GradientCodec):
+    """signSGD-style 1-bit: sign bits packed 8-per-uint8 plus one per-group
+    magnitude ``mu = mean |g|`` (over the true elements; the unpack kernels
+    mask the layout pad back to zero)."""
+    name = "sign1bit"
+    lossy = True
+
+    def __init__(self, fed=None, *, use_ref: bool = False,
+                 interpret: Optional[bool] = None):
+        del fed
+        self._kw = dict(use_ref=use_ref, interpret=interpret)
+
+    def _mu(self, group, g):
+        return jnp.sum(jnp.abs(g)) / jnp.float32(group.size)
+
+    def encode(self, group, g):
+        mu = self._mu(group, g)
+        bits = C.sign_pack(g, mu, group.size, **self._kw)
+        return {"bits": bits, "mu": mu}
+
+    def encode_ef(self, group, e):
+        mu = self._mu(group, e)
+        bits, err = C.sign_pack(e, mu, group.size, with_error=True,
+                                **self._kw)
+        return {"bits": bits, "mu": mu}, err
+
+    def decode(self, group, payload):
+        zeros = jnp.zeros((group.rows, LANES), jnp.float32)
+        return C.sign_unpack_fma(zeros, payload["bits"], payload["mu"],
+                                 group.size, **self._kw)
+
+    def decode_fma(self, group, acc, payload, w):
+        return C.sign_unpack_fma(acc, payload["bits"], payload["mu"] * w,
+                                 group.size, **self._kw)
+
+    def payload_bytes(self, group):
+        return -(-group.size // 8) + 4              # ceil(size/8) bits + mu
+
+
+@register_codec("topk")
+class TopKCodec(GradientCodec):
+    """Magnitude sparsification: the ``FedConfig.topk_ratio`` fraction of
+    largest-|g| elements per group ships as (fp32 value, int32 index)
+    pairs.  Pure jnp (``lax.top_k`` + scatter): index transport has no
+    flat-tile HBM-sweep form, so no Pallas kernel — see the module
+    docstring."""
+    name = "topk"
+    lossy = True
+
+    def __init__(self, fed=None):
+        self._ratio = getattr(fed, "topk_ratio", 0.01) if fed is not None \
+            else 0.01
+
+    def _k(self, group: GroupSpec) -> int:
+        return max(1, min(group.size, int(round(group.size * self._ratio))))
+
+    def encode(self, group, g):
+        flat = g.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), self._k(group))
+        return {"values": jnp.take(flat, idx), "indices": idx}
+
+    def decode(self, group, payload):
+        flat = jnp.zeros((group.rows * LANES,), jnp.float32)
+        flat = flat.at[payload["indices"]].set(payload["values"])
+        return flat.reshape(group.rows, LANES)
+
+    def payload_bytes(self, group):
+        return 8 * self._k(group)                   # fp32 value + i32 index

@@ -269,6 +269,24 @@ class FedConfig:
                                         # through_aggregation capability
                                         # makes that meta_mode valid
                                         # regardless of fused_update.
+    codec: str = "none"                 # gradient-codec registry name
+                                        # (repro.comm): the client->server
+                                        # uplink transport.  'none' ships
+                                        # fp32 (bit-identical to a codec-
+                                        # free round); 'int8' / 'sign1bit'
+                                        # / 'topk' are lossy — they need a
+                                        # flat-consuming engine
+                                        # (fused_update=True) and are
+                                        # meta_mode='post' only.
+    error_feedback: bool = False        # keep each client's compression
+                                        # residual in state["comm"] and add
+                                        # it back before the next round's
+                                        # encode (EF-SGD memory; restores
+                                        # convergence under aggressive
+                                        # codecs).  Requires a lossy codec.
+    topk_ratio: float = 0.01            # fraction of largest-|g| elements
+                                        # the 'topk' codec ships per dtype
+                                        # group
 
     def __post_init__(self):
         # registry-backed validation (lazy imports: repro.core modules
@@ -317,3 +335,36 @@ class FedConfig:
                     "meta_mode='through_aggregation' seeds the controllable "
                     "step size as exp(log_lr)=server_lr; server_lr must "
                     "be > 0")
+        # communication-compression knobs (repro.comm) — same lazy-import
+        # registry validation as the algorithm/executor fields above
+        from repro.comm.codecs import get_codec
+        if not 0.0 < self.topk_ratio <= 1.0:
+            raise ValueError(
+                f"topk_ratio={self.topk_ratio} must be in (0, 1]: it is "
+                "the fraction of elements the 'topk' codec transmits")
+        codec = get_codec(self.codec)(self)    # raises naming the registry
+        if self.error_feedback and not codec.lossy:
+            raise ValueError(
+                f"error_feedback=True with codec={self.codec!r} has no "
+                "compression residual to feed back; pick a lossy codec "
+                f"(e.g. 'int8', 'sign1bit', 'topk') or drop error_feedback")
+        if codec.lossy:
+            if self.meta and self.meta_mode == "through_aggregation":
+                raise ValueError(
+                    f"codec={self.codec!r} cannot combine with meta_mode="
+                    "'through_aggregation': the hypergradient would "
+                    "differentiate through a non-differentiable quantizer "
+                    "(silently treating decoded gradients as exact). Lossy "
+                    "codecs are meta_mode='post' only for now — a "
+                    "straight-through codec VJP is a ROADMAP follow-up.")
+            from repro.core.engines import resolve_engine
+            eng = resolve_engine(self)
+            if "lossy" not in getattr(eng, "codec_capabilities",
+                                      frozenset()):
+                raise ValueError(
+                    f"codec={self.codec!r} needs a server engine declaring "
+                    f"the 'lossy' codec capability, but {eng.name!r} "
+                    f"declares {sorted(eng.codec_capabilities)}: lossy "
+                    "codecs decode into flat dtype-group buffers. Set "
+                    "fused_update=True (the fused_flat engine) or use "
+                    "codec='none'.")

@@ -168,3 +168,50 @@ def scan_cohort_gradient_flat(client_update: Callable, w_t: PyTree,
         body, (acc0, jnp.zeros((), jnp.float32)),
         (cohort_batch, w32, lw32, rngs))
     return list(G), mean_loss
+
+
+def scan_cohort_gradient_coded(client_update: Callable, w_t: PyTree,
+                               cohort_batch: PyTree,
+                               client_weights: jax.Array, lr, rng, *,
+                               spec, codec, residuals: Optional[tuple] = None
+                               ) -> Tuple[list, jax.Array, Optional[tuple]]:
+    """:func:`scan_cohort_gradient_flat` with a lossy uplink codec
+    (:mod:`repro.comm`) between each client and the accumulator: client k's
+    flattened gradient is encoded, (optionally) error-compensated against
+    its ``residuals`` slot, decoded server-side and folded into the flat
+    Eq. (14) accumulators — for ``int8``/``sign1bit`` the decode fuses into
+    the streaming FMA itself (``kernels/comm`` dequantize-FMA), so a coded
+    client costs one encode sweep plus the same single FMA sweep per group
+    as the uncompressed path (error feedback rides the encode sweep).
+
+    residuals: per-group ``(cohort, rows, LANES)`` error-feedback stacks
+    (``state["comm"]["residual"]``) or None.  Returns (G_groups, mean_loss,
+    new_residuals) with new_residuals stacked in cohort order (None when
+    ``residuals`` is None).  Not differentiable w.r.t. the weights — lossy
+    codecs are ``meta_mode='post'``-only (guarded by the round builder)."""
+    from repro.comm.transport import client_coded_accumulate  # lazy: cycle
+    from repro.core import flat as flat_mod           # lazy: import cycle
+
+    cohort = client_weights.shape[0]
+    rngs = (jax.random.split(rng, cohort) if rng is not None
+            else jnp.zeros((cohort, 2), jnp.uint32))
+    w32 = client_weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w32), 1e-30)
+
+    def body(carry, inp):
+        accs, l_acc = carry
+        batch, weight, r, res_k = inp
+        g_k, l_k = client_update(
+            w_t, batch, lr, r if rng is not None else None)
+        wk = weight / wsum
+        g_bufs = flat_mod.flatten_tree(spec, g_k)
+        accs, r_new = client_coded_accumulate(codec, spec, accs, g_bufs,
+                                              wk, res_k)
+        return (accs, l_acc + wk * l_k), r_new
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    acc0 = tuple(flat_mod.zeros_flat(spec))
+    (G, mean_loss), new_res = lax.scan(
+        body, (acc0, jnp.zeros((), jnp.float32)),
+        (cohort_batch, w32, rngs, residuals))
+    return list(G), mean_loss, new_res

@@ -61,6 +61,10 @@ class ServerEngine:
     accepts: frozenset = frozenset()          # handle kinds consumed
     preferred: str = "tree"                   # kind to request if available
     meta_capabilities: frozenset = frozenset({"post"})
+    # which GradientCodec classes this engine can sit behind: lossy codecs
+    # decode into flat dtype-group buffers (repro.comm), so only engines
+    # consuming flat handles can declare "lossy"
+    codec_capabilities: frozenset = frozenset({"none"})
 
     def init_state(self, params: PyTree) -> PyTree:
         raise NotImplementedError
@@ -145,6 +149,7 @@ class FusedFlatEngine(ServerEngine):
     accepts = frozenset({"flat", "tree"})
     preferred = "flat"
     meta_capabilities = frozenset({"post", "through_aggregation"})
+    codec_capabilities = frozenset({"none", "lossy"})
 
     def __init__(self, fed):
         self._opt = fed.server_opt

@@ -81,12 +81,29 @@ class CohortExecutor:
     name: str = "?"
     produces: frozenset = frozenset()        # subset of {"flat", "tree"}
     supports_reweight: bool = False
+    # which GradientCodec classes this executor can run: {"none"} means the
+    # plain (uncompressed) path only; {"none", "lossy"} adds run_coded —
+    # per-client encode/decode on the uplink (repro.comm)
+    codec_capabilities: frozenset = frozenset({"none"})
 
     def run(self, client_update, params, cohort_batch, client_weights,
             lr, rng, *, kind: str) -> Tuple[Any, jax.Array]:
         """Run every client and aggregate.  Returns (handle, client_loss);
         ``kind`` is one of this executor's ``produces``."""
         raise NotImplementedError
+
+    def run_coded(self, client_update, params, cohort_batch, client_weights,
+                  lr, rng, *, codec, comm) -> Tuple[Any, jax.Array, Any]:
+        """Run every client, pass each gradient through ``codec``'s
+        encode/decode (the uplink simulation) and aggregate the decoded
+        gradients.  ``comm`` is the error-feedback state
+        (``state["comm"]``) or None.  Returns (flat handle, client_loss,
+        new_comm).  Only executors declaring the 'lossy' codec capability
+        implement this."""
+        raise NotImplementedError(
+            f"cohort executor {self.name!r} does not support lossy "
+            "gradient codecs (declares codec_capabilities="
+            f"{sorted(self.codec_capabilities)})")
 
     def reweightable(self, client_update, params, cohort_batch,
                      client_weights, lr, rng) -> ReweightableCohort:
@@ -155,6 +172,7 @@ class VmapExecutor(CohortExecutor):
     name = "vmap"
     produces = frozenset({"flat", "tree"})
     supports_reweight = True
+    codec_capabilities = frozenset({"none", "lossy"})
 
     def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
         self._agg_dtype = jnp.dtype(fed.grad_agg_dtype)
@@ -182,6 +200,23 @@ class VmapExecutor(CohortExecutor):
         Gs, ssq = flat_weighted_aggregate(spec, g_stack, client_weights)
         return FlatAggregate(Gs, spec, sq_norm=ssq), loss
 
+    def run_coded(self, client_update, params, cohort_batch, client_weights,
+                  lr, rng, *, codec, comm):
+        # clients still run in parallel; only the uplink stage (encode ->
+        # decode -> weighted accumulate, a few flat sweeps per client)
+        # walks the stacked cohort axis sequentially (repro.comm.transport)
+        from repro.comm.transport import coded_aggregate_stacked
+        from repro.core.flat import flatten_stacked
+        g_stack, loss = self._stack(client_update, params, cohort_batch,
+                                    client_weights, lr, rng)
+        spec = make_flat_spec(params)
+        g_groups = flatten_stacked(spec, g_stack)
+        res = comm["residual"] if comm is not None else None
+        Gs, new_res = coded_aggregate_stacked(codec, spec, g_groups,
+                                              client_weights, res)
+        new_comm = {"residual": new_res} if comm is not None else None
+        return FlatAggregate(Gs, spec, sq_norm=None), loss, new_comm
+
     def reweightable(self, client_update, params, cohort_batch,
                      client_weights, lr, rng):
         # clients run ONCE here (loss already n_k-weighted); aggregate()
@@ -207,6 +242,7 @@ class ScanExecutor(CohortExecutor):
     name = "scan"
     produces = frozenset({"flat", "tree"})
     supports_reweight = True
+    codec_capabilities = frozenset({"none", "lossy"})
 
     def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
         del spmd_axis_name, grad_shardings
@@ -224,6 +260,20 @@ class ScanExecutor(CohortExecutor):
             client_update, params, cohort_batch, client_weights, lr, rng,
             spec=spec)
         return FlatAggregate(Gs, spec, sq_norm=None), loss
+
+    def run_coded(self, client_update, params, cohort_batch, client_weights,
+                  lr, rng, *, codec, comm):
+        # the codec slots straight into the cohort scan: each step encodes
+        # one client's flat gradient and the decode fuses into the
+        # streaming FMA (kernels/comm dequantize-FMA)
+        from repro.core.aggregate import scan_cohort_gradient_coded
+        spec = make_flat_spec(params)
+        res = comm["residual"] if comm is not None else None
+        Gs, loss, new_res = scan_cohort_gradient_coded(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            spec=spec, codec=codec, residuals=res)
+        new_comm = {"residual": new_res} if comm is not None else None
+        return FlatAggregate(Gs, spec, sq_norm=None), loss, new_comm
 
     def reweightable(self, client_update, params, cohort_batch,
                      client_weights, lr, rng):

@@ -4,6 +4,11 @@ COMPOSING three plugin registries instead of a hand-wired branch tree:
     distribute -> local updating   (ClientAlgorithm registry,
                                     repro.core.algorithms: uga / fedavg /
                                     fedprox / fednova / yours)
+               -> uplink codec     (GradientCodec registry, repro.comm:
+                                    none / int8 / sign1bit / topk, with
+                                    optional per-client error feedback in
+                                    state["comm"] — the lossy-transport
+                                    simulation, post-meta-mode only)
                -> unbiased aggregation (CohortExecutor registry,
                                     repro.core.executors: vmap / scan /
                                     sharded -> a uniform aggregate handle)
@@ -52,6 +57,7 @@ from repro.configs.base import FedConfig
 from repro.core.algorithms import get_algorithm
 from repro.core.engines import resolve_engine, tree_global_norm
 from repro.core.executors import resolve_executor
+from repro.core.flat import make_flat_spec
 from repro.core.meta import meta_update, meta_update_through_cohort
 from repro.models.model import Model
 
@@ -88,6 +94,12 @@ def init_server_state(model: Model, fed: FedConfig, key, *,
             "w_logits": jnp.zeros((fed.cohort,), jnp.float32),
             "log_lr": jnp.log(jnp.float32(resolve_server_lr(fed))),
         }
+    # lazy: repro.comm imports repro.core.flat, which triggers this package
+    from repro.comm import init_comm_state, resolve_codec
+    if fed.error_feedback and resolve_codec(fed).lossy:
+        # Per-client compression residuals (repro.comm): zero EF memory per
+        # cohort slot, threaded through checkpoints exactly like ctrl.
+        state["comm"] = init_comm_state(fed, make_flat_spec(params))
     return state
 
 
@@ -165,6 +177,43 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             "grad_shardings (vmap/scan cohorts both support "
             "through_aggregation) or use meta_mode='post'.")
 
+    # lazy: repro.comm imports repro.core.flat, which triggers this package
+    from repro.comm import comm_bytes_per_client, resolve_codec
+    codec = resolve_codec(fed)
+    lossy_codec = codec.lossy
+    if lossy_codec:
+        # FedConfig validates the built-in combinations too, but re-check
+        # against the RESOLVED plugins (registry-name overrides, custom
+        # executors/engines) so a lossy codec never silently runs a path
+        # that drops the compression or differentiates through it.
+        if through_agg:
+            raise ValueError(
+                f"codec={fed.codec!r} with "
+                "meta_mode='through_aggregation' would differentiate "
+                "through a non-differentiable quantizer (the hypergradient "
+                "would silently treat the decoded gradients as exact). "
+                "Lossy codecs are meta_mode='post' only for now — a "
+                "straight-through codec VJP is a ROADMAP follow-up. Use "
+                "meta_mode='post' or codec='none'.")
+        if "lossy" not in exe.codec_capabilities:
+            raise ValueError(
+                f"codec={fed.codec!r} needs a cohort executor declaring "
+                f"the 'lossy' codec capability, but {exe.name!r} declares "
+                f"{sorted(exe.codec_capabilities)}: sharded cohorts "
+                "(grad_shardings) pre-aggregate per leaf, so there is no "
+                "per-client uplink to compress. Drop grad_shardings "
+                "(vmap/scan cohorts both support codecs) or use "
+                "codec='none'.")
+        if "lossy" not in eng.codec_capabilities:
+            raise ValueError(
+                f"codec={fed.codec!r} needs a server engine declaring the "
+                f"'lossy' codec capability, but {eng.name!r} declares "
+                f"{sorted(eng.codec_capabilities)}: lossy codecs decode "
+                "into the flat dtype-group buffers the fused engine "
+                "consumes. Set FedConfig(fused_update=True) (the "
+                "fused_flat engine) or use codec='none'.")
+    use_ef = lossy_codec and fed.error_feedback
+
     def one_round(state: PyTree, cohort_batch: PyTree, meta_batch: PyTree,
                   client_weights: jax.Array, rng: jax.Array
                   ) -> Tuple[PyTree, Dict[str, jax.Array]]:
@@ -184,6 +233,8 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             part_metrics = {"participants": jnp.sum(mask)}
 
         meta_metrics = {}
+        comm_metrics = {}
+        new_comm = None
         if through_agg:
             rw = exe.reweightable(client_update, params, cohort_batch,
                                   client_weights, lr_c, rng_c)
@@ -192,6 +243,18 @@ def make_federated_round(model: Model, fed: FedConfig, *,
                 model.loss, rw, client_weights, params, state["opt"],
                 meta_batch, state["ctrl"], engine=eng,
                 ctrl_lr=fed.ctrl_lr, rng=rng_m)
+        elif lossy_codec:
+            handle, client_loss, new_comm = exe.run_coded(
+                client_update, params, cohort_batch, client_weights, lr_c,
+                rng_c, codec=codec, comm=state.get("comm"))
+            new_params, opt_state, gn_post = eng.apply(
+                params, handle, state["opt"], lr=server_lr)
+            # measured uplink bytes: per-client payload size (static — the
+            # codec's transport shapes) times the clients that reported
+            bytes_pc = comm_bytes_per_client(codec, make_flat_spec(params))
+            n_up = part_metrics.get(
+                "participants", jnp.float32(client_weights.shape[0]))
+            comm_metrics = {"comm_bytes": jnp.float32(bytes_pc) * n_up}
         else:
             handle, client_loss = exe.run(
                 client_update, params, cohort_batch, client_weights, lr_c,
@@ -203,7 +266,7 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         # (lax.scan) needs identical keys per config, so the executor/
         # engine/mode combinations must not each grow their own dict
         metrics = {"client_loss": client_loss, "grad_norm": gn_post,
-                   **part_metrics, **meta_metrics}
+                   **part_metrics, **meta_metrics, **comm_metrics}
 
         if fed.meta and not through_agg:
             lr_m = fed.meta_lr * (fed.lr_decay ** r)
@@ -215,6 +278,8 @@ def make_federated_round(model: Model, fed: FedConfig, *,
                      "round": state["round"] + 1}
         if through_agg:
             new_state["ctrl"] = new_ctrl
+        if use_ef:
+            new_state["comm"] = new_comm
         return new_state, metrics
 
     if rounds_per_call == 1:

@@ -1,0 +1,9 @@
+"""Pallas pack/unpack kernels for the gradient-compression uplink
+(``repro.comm``): int8 quantize / dequantize-FMA and 1-bit sign pack /
+unpack-FMA over the flat ``(rows, LANES)`` dtype-group buffers of
+``repro.core.flat`` — same conventions as ``kernels/fused_update``
+(interpret-mode CPU path, pure-jnp ``ref`` oracles, fp32 math)."""
+from repro.kernels.comm.ops import (dequant_i8_fma, quantize_i8, sign_pack,
+                                    sign_unpack_fma)
+
+__all__ = ["quantize_i8", "dequant_i8_fma", "sign_pack", "sign_unpack_fma"]

@@ -1,0 +1,52 @@
+"""Dispatch layer for the comm kernels — same conventions as
+``kernels/fused_update/ops``: ``use_ref=True`` swaps in the pure-jnp
+oracle, ``interpret`` defaults to True off-TPU so the identical code path
+runs in the CPU tier-1 suite.  These are the primitives the codecs in
+``repro.comm.codecs`` compose; nothing here owns scales/magnitudes — the
+codec computes those (one jnp reduction) and the kernels do the sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.comm import kernel as K
+from repro.kernels.comm import ref as R
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def quantize_i8(g, inv_scale, scale, *, with_error: bool = False,
+                use_ref: bool = False, interpret: Optional[bool] = None):
+    if use_ref:
+        return R.quantize_i8_ref(g, inv_scale, scale, with_error=with_error)
+    return K.quantize_i8_pass(g, inv_scale, scale, with_error=with_error,
+                              interpret=_interp(interpret))
+
+
+def dequant_i8_fma(acc, q, scale_w, *, use_ref: bool = False,
+                   interpret: Optional[bool] = None):
+    if use_ref:
+        return R.dequant_i8_fma_ref(acc, q, scale_w)
+    return K.dequant_i8_fma_pass(acc, q, scale_w,
+                                 interpret=_interp(interpret))
+
+
+def sign_pack(g, mu, n_valid: int, *, with_error: bool = False,
+              use_ref: bool = False, interpret: Optional[bool] = None):
+    if use_ref:
+        return R.sign_pack_ref(g, mu, n_valid, with_error=with_error)
+    return K.sign_pack_pass(g, mu, n_valid, with_error=with_error,
+                            interpret=_interp(interpret))
+
+
+def sign_unpack_fma(acc, packed, mu_w, n_valid: int, *,
+                    use_ref: bool = False,
+                    interpret: Optional[bool] = None):
+    if use_ref:
+        return R.sign_unpack_fma_ref(acc, packed, mu_w, n_valid)
+    return K.sign_unpack_fma_pass(acc, packed, mu_w, n_valid,
+                                  interpret=_interp(interpret))

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the communication-compression kernels.
+
+Same math as ``kernel.py``, element for element — the ``use_ref=True`` arm
+of ``repro.kernels.comm.ops`` and the oracle the kernel tests compare
+against (bit-exact for the integer pack stages, same fp32 contraction for
+the FMA stages).  The pad convention matches the kernels: int8 pad is
+self-inert (0 -> 0), sign decode masks elements with flat index
+>= ``n_valid`` back to exact zero.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.comm.kernel import SIGN_PACK
+
+
+def _sign_bits(g: jax.Array) -> jax.Array:
+    return (g >= 0.0).astype(jnp.int32)
+
+
+def _valid_mask(shape: Tuple[int, int], n_valid) -> jax.Array:
+    rows, lanes = shape
+    row = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return (row * lanes + lane) < n_valid
+
+
+def quantize_i8_ref(g: jax.Array, inv_scale, scale, *,
+                    with_error: bool = False):
+    q = jnp.clip(jnp.round(g * jnp.asarray(inv_scale, jnp.float32)),
+                 -127.0, 127.0)
+    q8 = q.astype(jnp.int8)
+    if not with_error:
+        return q8
+    return q8, g - q * jnp.asarray(scale, jnp.float32)
+
+
+def dequant_i8_fma_ref(acc: jax.Array, q: jax.Array, scale_w) -> jax.Array:
+    return acc + jnp.asarray(scale_w, jnp.float32) * q.astype(jnp.float32)
+
+
+def sign_pack_ref(g: jax.Array, mu, n_valid: int, *,
+                  with_error: bool = False):
+    rows, lanes = g.shape
+    bits = _sign_bits(g).reshape(rows // SIGN_PACK, SIGN_PACK, lanes)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, SIGN_PACK, 1), 1)
+    packed = jnp.sum(bits << shifts, axis=1).astype(jnp.uint8)
+    if not with_error:
+        return packed
+    s = (2 * _sign_bits(g) - 1).astype(jnp.float32)
+    dec = jnp.asarray(mu, jnp.float32) * jnp.where(
+        _valid_mask(g.shape, n_valid), s, 0.0)
+    return packed, g - dec
+
+
+def sign_unpack_fma_ref(acc: jax.Array, packed: jax.Array, mu_w,
+                        n_valid: int) -> jax.Array:
+    rows, lanes = acc.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, SIGN_PACK, 1), 1)
+    bits = (packed.astype(jnp.int32)[:, None, :] >> shifts) & 1
+    s = (2 * bits - 1).astype(jnp.float32).reshape(rows, lanes)
+    dec = jnp.where(_valid_mask(acc.shape, n_valid), s, 0.0)
+    return acc + jnp.asarray(mu_w, jnp.float32) * dec

@@ -32,6 +32,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import available_codecs
 from repro.configs import FedConfig, get_arch
 from repro.core import FederatedTrainer, available_algorithms
 from repro.data.partition import partition_iid
@@ -67,7 +68,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  server_lr: Optional[float] = None,
                  meta_lr: Optional[float] = None, server_opt: str = "sgd",
                  meta_mode: str = "post", ctrl_lr: float = 0.01,
-                 participation: float = 1.0,
+                 participation: float = 1.0, codec: str = "none",
+                 error_feedback: bool = False, topk_ratio: float = 0.01,
                  num_clients: int = 32, examples: int = 2048,
                  iid: bool = False, seed: int = 0, log_every: int = 10,
                  ckpt_path: Optional[str] = None,
@@ -88,7 +90,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         server_lr=server_lr if server_lr is not None else client_lr,
         meta_lr=meta_lr if meta_lr is not None else client_lr,
         server_opt=server_opt, meta_mode=meta_mode, ctrl_lr=ctrl_lr,
-        participation=participation,
+        participation=participation, codec=codec,
+        error_feedback=error_feedback, topk_ratio=topk_ratio,
         cohort_strategy=strategy, lr_decay=0.992, fused_update=fused)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
@@ -164,6 +167,16 @@ def main():
                     help="<1: straggler dropout — per-round probability a "
                          "sampled client reports; dropped clients' weights "
                          "are zeroed inside the aggregation")
+    ap.add_argument("--codec", default="none",
+                    choices=list(available_codecs()),
+                    help="client->server uplink gradient codec "
+                         "(repro.comm); lossy codecs need --fused")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="keep per-client compression residuals "
+                         "(state['comm']) and re-add them before each "
+                         "round's encode (needs a lossy --codec)")
+    ap.add_argument("--topk-ratio", type=float, default=0.01,
+                    help="fraction of elements the 'topk' codec ships")
     ap.add_argument("--num-clients", type=int, default=32)
     ap.add_argument("--log-every", type=int, default=10,
                     help="print a history record every N rounds (0: quiet)")
@@ -187,7 +200,8 @@ def main():
         client_lr=args.client_lr, server_lr=args.server_lr,
         meta_lr=args.meta_lr, server_opt=args.server_opt,
         meta_mode=args.meta_mode, ctrl_lr=args.ctrl_lr,
-        participation=args.participation,
+        participation=args.participation, codec=args.codec,
+        error_feedback=args.error_feedback, topk_ratio=args.topk_ratio,
         strategy=args.strategy, num_clients=args.num_clients,
         log_every=args.log_every,
         examples=args.examples, iid=args.iid, seed=args.seed,
