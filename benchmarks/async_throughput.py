@@ -1,0 +1,226 @@
+"""Buffered-async federation benchmark: rounds-completed per simulated
+round-unit under a straggler-heavy fleet, vs the synchronous barrier — plus
+the numerics gates the async runtime ships under.
+
+Runs the CPU smoke config (the round_latency MLP) through the REAL driver
+(``FederatedTrainer``, ``engine='buffered_async'``, ``rounds_per_call``
+chunking) and emits ``BENCH_async_throughput.json``:
+
+  * **simulated-time accounting** (host side, from the SAME seeded fault
+    streams the jitted rounds drew — ``repro.sim.faults.fault_streams`` is
+    deterministic in the round rng): a synchronous round takes
+    ``max_k(latency_k + delay_k)`` round-units (the barrier waits for the
+    slowest report), while the async server dispatches a fresh cohort
+    every 1.0 round-unit regardless and steps whenever K deltas arrive;
+  * **rounds-equivalent throughput**: async server steps consume K deltas
+    where a sync round consumes a full cohort, so async work is counted as
+    ``server_steps * K / cohort`` — the ratio is not inflated by smaller
+    aggregation granularity;
+  * numerics gates (the script's self-check — non-zero exit on failure,
+    so CI runs it directly):
+      - a FAULT-FREE async arm with K = capacity = cohort is bit-identical
+        to the synchronous fused-scan round (params + opt state compared
+        with np.array_equal, loss curves exactly equal);
+      - async under the 'stragglers' profile (20% of reports 1-4 rounds
+        late, heavy-tail client speeds) completes >= 1.5x rounds-equivalent
+        per simulated round-unit vs the synchronous barrier;
+      - its final loss is no WORSE than the synchronous arm's + 1e-2 (the
+        staleness-discounted steps may not cost convergence quality; the
+        async arm typically lands lower — it takes ~2 server steps per
+        dispatch period — so the gate is one-sided, with the signed
+        difference reported);
+      - every arm's loss curve is finite.
+
+Usage:  PYTHONPATH=src python benchmarks/async_throughput.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedTrainer
+from repro.data.pipeline import FederatedData
+from repro.models.model import Model
+from repro.sim.faults import fault_streams, resolve_faults
+
+D, H, CLASSES = 64, 128, 10
+COHORT, BATCH, LOCAL_STEPS = 8, 32, 2
+ROUNDS_PER_CALL = 4
+ASYNC_K = COHORT // 2
+
+
+def make_mlp_model():
+    def init(k):
+        k1, k2 = jax.random.split(k)
+        return {"w1": jax.random.normal(k1, (D, H)) * 0.3,
+                "w2": jax.random.normal(k2, (H, CLASSES)) * 0.3}
+
+    def loss(w, batch, rng=None):
+        logits = jnp.tanh(batch["x"] @ w["w1"]) @ w["w2"]
+        l = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["y"][:, None], 1))
+        return l, {}
+
+    return Model(name="bench-mlp", init=init, loss=loss)
+
+
+def make_data(n=2048, clients=16, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, D)).astype(np.float32)
+    y = rng.integers(0, CLASSES, n).astype(np.int32)
+    parts = np.array_split(rng.permutation(n), clients)
+    meta = rng.choice(n, 64, replace=False)
+    return FederatedData(arrays={"x": x, "y": y}, client_indices=parts,
+                         meta_indices=meta, seed=seed)
+
+
+BASE = FedConfig(algorithm="uga", meta=True, cohort=COHORT,
+                 local_steps=LOCAL_STEPS, client_lr=0.05, server_lr=0.1,
+                 meta_lr=0.05, clip_norm=1.0, fused_update=True,
+                 cohort_strategy="scan")
+
+
+def run_arm(model, data, fed: FedConfig, rounds: int):
+    """One trained arm through the facade; returns (trainer, history,
+    rounds_per_s wall-clock)."""
+    trainer = FederatedTrainer(model, fed, rounds_per_call=ROUNDS_PER_CALL,
+                               seed=0)
+    t0 = time.perf_counter()
+    hist = trainer.run(data, rounds=rounds, cohort=COHORT, batch=BATCH,
+                       meta_batch=BATCH)
+    rps = rounds / (time.perf_counter() - t0)
+    return trainer, hist, rps
+
+
+def simulated_sync_duration(key, rounds: int, fed: FedConfig) -> float:
+    """Round-units the synchronous barrier spends: per round, the max over
+    the cohort of (completion latency + delay-fault lateness) — recomputed
+    host-side from the same per-round rng folds the device rounds use."""
+    fc = resolve_faults(fed)
+    total = 0.0
+    for r in range(rounds):
+        fs = fault_streams(jax.random.fold_in(key, r), COHORT, fc)
+        total += float(jnp.max(fs.latency + fs.delay.astype(jnp.float32)))
+    return total
+
+
+def state_leaves(trainer):
+    return (jax.tree.leaves(trainer.state["params"])
+            + jax.tree.leaves(trainer.state["opt"]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer rounds (CI smoke); every gate still runs")
+    ap.add_argument("--out", default="BENCH_async_throughput.json")
+    args = ap.parse_args()
+    rounds = 8 if args.fast else 20
+
+    model = make_mlp_model()
+    data = make_data()
+
+    # arm 1: the synchronous fused-scan barrier (also the bit-identity
+    # reference — the 'stragglers' profile only DELAYS reports, and a
+    # barrier with no deadline waits for them, so its training bits match
+    # the fault-free run exactly; only its simulated time differs)
+    fed_sync = BASE
+    tr_sync, hist_sync, rps_sync = run_arm(model, data, fed_sync, rounds)
+
+    # arm 2: fault-free async, K = capacity = cohort -> every tick pools
+    # the whole cohort and flushes it in client order through the same
+    # fused accumulate/apply kernels: bit-identity gate
+    fed_clean = dataclasses.replace(
+        BASE, engine="buffered_async", async_buffer=COHORT,
+        async_capacity=COHORT)
+    tr_clean, hist_clean, rps_clean = run_arm(model, data, fed_clean, rounds)
+
+    # arm 3: async under the 20%-stragglers profile, stepping every K =
+    # cohort/2 arrivals with invsqrt staleness discounting
+    fed_strag = dataclasses.replace(
+        BASE, engine="buffered_async", async_buffer=ASYNC_K,
+        async_capacity=2 * COHORT, fault_profile="stragglers")
+    tr_strag, hist_strag, rps_strag = run_arm(model, data, fed_strag, rounds)
+
+    # ---- simulated-time throughput -------------------------------------
+    fed_sync_strag = dataclasses.replace(BASE, fault_profile="stragglers")
+    sync_duration = simulated_sync_duration(tr_sync.key, rounds,
+                                            fed_sync_strag)
+    sync_done = float(rounds)
+    async_duration = float(rounds)       # 1.0 round-unit dispatch cadence
+    async_done = sum(h["server_steps"] for h in hist_strag) \
+        * ASYNC_K / COHORT
+    throughput_ratio = (async_done / async_duration) \
+        / (sync_done / sync_duration)
+
+    # ---- gates ----------------------------------------------------------
+    identical = (
+        all(np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(state_leaves(tr_sync), state_leaves(tr_clean)))
+        and [h["client_loss"] for h in hist_sync]
+        == [h["client_loss"] for h in hist_clean])
+    curves = {"sync": [h["client_loss"] for h in hist_sync],
+              "async_clean": [h["client_loss"] for h in hist_clean],
+              "async_stragglers": [h["client_loss"] for h in hist_strag]}
+    loss_diff = curves["async_stragglers"][-1] - curves["sync"][-1]
+    loss_gap = max(0.0, loss_diff)       # one-sided: degradation only
+    gates = {
+        "pass_async_clean_bit_identical": bool(identical),
+        "pass_throughput_1p5x": bool(throughput_ratio >= 1.5),
+        "pass_final_loss_gap_1e2": bool(loss_gap <= 1e-2),
+        "pass_all_finite": bool(all(
+            np.isfinite(c).all() for c in curves.values())),
+    }
+
+    report = {
+        "benchmark": "async_throughput",
+        "config": {"model": f"mlp {D}x{H}x{CLASSES}", "cohort": COHORT,
+                   "client_batch": BATCH, "local_steps": LOCAL_STEPS,
+                   "algorithm": "uga+meta", "rounds": rounds,
+                   "rounds_per_call": ROUNDS_PER_CALL,
+                   "async_buffer": ASYNC_K,
+                   "async_capacity": 2 * COHORT,
+                   "staleness_mode": BASE.staleness_mode,
+                   "fault_profile": "stragglers",
+                   "backend": jax.default_backend()},
+        "simulated_time": {
+            "sync_round_units": round(sync_duration, 3),
+            "async_round_units": round(async_duration, 3),
+            "sync_rounds_done": sync_done,
+            "async_rounds_equivalent": round(async_done, 3),
+            "throughput_ratio": round(throughput_ratio, 3),
+        },
+        "wall_clock_rounds_per_s": {"sync": round(rps_sync, 2),
+                                    "async_clean": round(rps_clean, 2),
+                                    "async_stragglers": round(rps_strag, 2)},
+        "final_loss": {k: round(c[-1], 5) for k, c in curves.items()},
+        "final_loss_diff_async_vs_sync": round(loss_diff, 6),
+        "final_loss_gap_async_vs_sync": round(loss_gap, 6),
+        "loss_curves": {k: [round(v, 5) for v in c]
+                        for k, c in curves.items()},
+        "async_metrics_last_round": {
+            k: hist_strag[-1].get(k) for k in
+            ("arrivals", "server_steps", "buffer_fill", "staleness_mean",
+             "staleness_max", "staleness_hist", "fault_delayed")},
+        **gates,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    if not all(gates.values()):
+        failed = [k for k, v in gates.items() if not v]
+        print(f"[async_throughput] SELF-CHECK FAILED: {failed}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

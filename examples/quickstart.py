@@ -58,3 +58,14 @@ rec = FederatedTrainer(model, fed_i8, seed=0).run(
     data, rounds=2, cohort=fed.cohort, batch=8, meta_batch=8)[-1]
 print(f"int8+EF uplink: {rec['comm_bytes'] / 1e6:.2f} MB/round "
       f"(fp32 would ship ~4x), client_loss={rec['client_loss']:.4f}")
+
+# 6. fault-tolerant async federation (repro.core.async_round + repro.sim):
+# a flaky fleet feeding the buffered staleness-aware runtime is 3 lines
+fed_async = dataclasses.replace(fed, engine="buffered_async", fused_update=True,
+                                async_buffer=2, fault_profile="flaky")
+rec = FederatedTrainer(model, fed_async, seed=0).run(
+    data, rounds=3, cohort=fed.cohort, batch=8, meta_batch=8)[-1]
+print(f"buffered async under faults: arrivals={rec['arrivals']:.0f} "
+      f"server_steps={rec['server_steps']:.0f} "
+      f"staleness_mean={rec['staleness_mean']:.2f} "
+      f"client_loss={rec['client_loss']:.4f}")

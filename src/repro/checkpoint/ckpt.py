@@ -31,17 +31,28 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
 
 
 def save(path: str, tree: PyTree, *, extra: Dict[str, Any] | None = None):
+    """Crash-safe write: serialize to a unique temp file in the target
+    directory, fsync, then atomically rename over ``path``.  A writer
+    killed at ANY point leaves either the previous checkpoint or the new
+    one — never a truncated blob — and no same-named temp for a concurrent
+    retry to trip over (the pid-suffixed temp is cleaned up on failure)."""
     flat = _flatten(tree)
     payload = {
         "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape),
                        "data": v.tobytes()} for k, v in flat.items()},
         "extra": extra or {},
     }
-    tmp = path + ".tmp"
+    tmp = f"{path}.tmp.{os.getpid()}"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
@@ -52,7 +63,25 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
     (``{"m": (buf, ...), ...}``); tuple positions key as their indices, so
     the tuple-structured flat layout round-trips like any dict."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        blob = f.read()
+    try:
+        payload = msgpack.unpackb(blob, raw=False)
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint {path!r} is not a readable msgpack blob "
+            f"({type(e).__name__}: {e}) — truncated or corrupted on disk. "
+            "Writers rename atomically, so the PREVIOUS checkpoint (if this "
+            "path was ever written successfully) was replaced whole; this "
+            "file was damaged after the fact. Re-save or restore an older "
+            "copy.") from e
+    if not isinstance(payload, dict) or "leaves" not in payload \
+            or "extra" not in payload:
+        raise ValueError(
+            f"checkpoint {path!r} decoded but is not a checkpoint payload: "
+            f"expected a dict with 'leaves' and 'extra' keys, got "
+            f"{type(payload).__name__} with keys "
+            f"{sorted(payload)[:8] if isinstance(payload, dict) else '?'} — "
+            "was this file written by repro.checkpoint.save?")
     leaves = payload["leaves"]
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
@@ -67,7 +96,15 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
                 f"older drivers cannot resume a full server state; restore "
                 f"them into bare params instead.")
         rec = leaves[key]
-        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        try:
+            arr = np.frombuffer(rec["data"],
+                                dtype=rec["dtype"]).reshape(rec["shape"])
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint {path!r} leaf {key!r} is corrupt: "
+                f"{len(rec.get('data', b''))} payload bytes do not decode "
+                f"as dtype={rec.get('dtype')!r} shape={rec.get('shape')!r} "
+                f"({type(e).__name__}: {e})") from e
         assert tuple(arr.shape) == tuple(np.shape(leaf)), (key, arr.shape)
         out.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, out), payload["extra"]

@@ -108,3 +108,43 @@ def coded_aggregate_stacked(codec: GradientCodec, spec: FlatSpec,
     acc0 = tuple(flat_mod.zeros_flat(spec))
     G, new_res = lax.scan(body, acc0, (tuple(g_groups), w, residuals))
     return list(G), new_res
+
+
+def coded_decode_stacked(codec: GradientCodec, spec: FlatSpec,
+                         g_groups, client_weights: jax.Array,
+                         residuals: Optional[tuple]
+                         ) -> Tuple[List[jax.Array], Optional[tuple]]:
+    """The buffered-async executor's codec stage: encode/decode each
+    client's delta INDIVIDUALLY, without aggregating — the async delta pool
+    (``repro.core.async_round``) must store what the server actually
+    received, because pooled deltas from different rounds are combined only
+    at flush time with staleness-dependent weights unknown at encode time.
+
+    Same per-client uplink as :func:`client_coded_accumulate` minus the
+    FMA: with EF the payload is error-compensated against the client's
+    ``state["comm"]`` slot, and a non-transmitting client (w == 0: masked
+    out, crashed, or dropped by fault injection) keeps its residual
+    byte-identical — the server received nothing, so no error was
+    committed.
+
+    Returns (decoded stacks — list of (cohort, rows, LANES) fp32 per dtype
+    group — and new_residuals stacked per group, or None without EF)."""
+    w = client_weights.astype(jnp.float32)
+
+    def body(carry, xs):
+        g_k, w_k, res_k = xs
+        dec_k, res_out = [], []
+        if res_k is None:
+            for group, g in zip(spec.groups, g_k):
+                dec_k.append(codec.decode(group, codec.encode(group, g)))
+            return carry, (tuple(dec_k), None)
+        transmitted = (jnp.asarray(w_k, jnp.float32) > 0.0
+                       ).astype(jnp.float32)
+        for group, g, res in zip(spec.groups, g_k, res_k):
+            payload, r_new = codec.encode_ef(group, g + res)
+            dec_k.append(codec.decode(group, payload))
+            res_out.append(transmitted * r_new + (1.0 - transmitted) * res)
+        return carry, (tuple(dec_k), tuple(res_out))
+
+    _, (dec, new_res) = lax.scan(body, (), (tuple(g_groups), w, residuals))
+    return list(dec), new_res

@@ -287,6 +287,42 @@ class FedConfig:
     topk_ratio: float = 0.01            # fraction of largest-|g| elements
                                         # the 'topk' codec ships per dtype
                                         # group
+    # ---- buffered-async runtime (engine='buffered_async') ----------------
+    async_buffer: int = 0               # K: server steps every K arrived
+                                        # deltas (0 -> cohort, i.e. one step
+                                        # per fault-free tick)
+    async_capacity: int = 0             # delta-pool slots (0 -> 2*cohort);
+                                        # overflow evicts the stalest delta
+    async_max_staleness: int = 0        # >0: evict arrived deltas older
+                                        # than this many server versions
+    staleness_mode: str = "invsqrt"     # flush-weight discount of a stale
+                                        # delta: 'invsqrt' (FedBuff
+                                        # 1/sqrt(1+s)) | 'inv' | 'none'
+    # ---- client fault injection (repro.sim.faults) ------------------------
+    fault_profile: str = "none"         # named profile ('none' | 'flaky' |
+                                        # 'stragglers'); fault_* fields >= 0
+                                        # override individual rates
+    fault_drop: float = -1.0            # P(uplink report lost)
+    fault_crash: float = -1.0           # P(client dies mid-round)
+    fault_delay: float = -1.0           # P(report delivered rounds late)
+    fault_max_delay: int = -1           # late reports land U{1..max_delay}
+                                        # ticks late (async pool buffers
+                                        # them; the sync barrier waits)
+    fault_garble: float = -1.0          # P(payload corrupted) — the async
+                                        # delta pool only; explicit garble
+                                        # on a sync engine is a config error
+    fault_garble_scale: float = -1.0    # corrupted payload multiplier range
+    fault_speed_tail: float = -1.0      # lognormal sigma of client compute
+                                        # time (simulated-latency model)
+    round_deadline: float = 0.0         # sync barrier only: >0 drops any
+                                        # client whose simulated completion
+                                        # exceeds this many round-units
+                                        # (async replaces the barrier — use
+                                        # async_max_staleness there)
+    retry_backoff: int = 0              # trainer policy: >0 re-enqueues a
+                                        # crashed/dropped/timed-out client
+                                        # after backoff * 2^attempt rounds
+    retry_max: int = 3                  # retry attempts per client failure
 
     def __post_init__(self):
         # registry-backed validation (lazy imports: repro.core modules
@@ -368,3 +404,37 @@ class FedConfig:
                     "codecs decode into flat dtype-group buffers. Set "
                     "fused_update=True (the fused_flat engine) or use "
                     "codec='none'.")
+        # fault-injection / async-runtime knobs — resolve_faults performs
+        # the rate/shape validation (raises naming the bad field)
+        from repro.sim.faults import resolve_faults
+        resolve_faults(self)
+        if self.staleness_mode not in ("none", "inv", "invsqrt"):
+            raise ValueError(
+                f"unknown staleness_mode {self.staleness_mode!r}; expected "
+                "'none', 'inv' or 'invsqrt' (the FedBuff 1/sqrt(1+s) "
+                "default)")
+        if (self.async_buffer < 0 or self.async_capacity < 0
+                or self.async_max_staleness < 0):
+            raise ValueError(
+                f"async_buffer={self.async_buffer} / async_capacity="
+                f"{self.async_capacity} / async_max_staleness="
+                f"{self.async_max_staleness} must be >= 0 (0 means the "
+                "default: K=cohort, capacity=2*cohort, no staleness bound)")
+        if self.retry_backoff < 0 or self.retry_max < 0:
+            raise ValueError(
+                f"retry_backoff={self.retry_backoff} / retry_max="
+                f"{self.retry_max} must be >= 0")
+        if self.engine == "buffered_async":
+            k = self.async_buffer or self.cohort
+            cap = self.async_capacity or 2 * self.cohort
+            if k > cap:
+                raise ValueError(
+                    f"async_buffer={k} exceeds async_capacity={cap}: the "
+                    "pool can never hold K deltas, so the server would "
+                    "never step (deadlock). Raise async_capacity or lower "
+                    "async_buffer.")
+            if self.round_deadline > 0:
+                raise ValueError(
+                    "round_deadline is a synchronous-barrier timeout; the "
+                    "buffered_async runtime has no barrier to time out — "
+                    "bound lateness with async_max_staleness instead")

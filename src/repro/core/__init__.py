@@ -16,8 +16,10 @@ through three plugin registries plus a facade:
 ``stack_round_inputs`` keep their pre-registry signatures (thin
 compositions over the registries) so existing callers run unmodified.
 """
-from repro.core.aggregate import (cohort_gradient, scan_cohort_gradient_flat,
-                                  weighted_mean)
+from repro.core.aggregate import (cohort_gradient, scan_cohort_deltas_flat,
+                                  scan_cohort_gradient_flat, weighted_mean)
+from repro.core.async_round import (init_async_state, make_async_tick,
+                                    resolve_async_shape, staleness_discount)
 from repro.core.algorithms import (available_algorithms, get_algorithm,
                                    register_algorithm)
 from repro.core.client import (fedavg_update, make_client_update, uga_update)
@@ -35,7 +37,10 @@ from repro.core.round import (init_server_state, make_federated_round,
 from repro.core.trainer import FederatedTrainer
 from repro.core import server_opt
 
-__all__ = ["cohort_gradient", "scan_cohort_gradient_flat", "weighted_mean",
+__all__ = ["cohort_gradient", "scan_cohort_deltas_flat",
+           "scan_cohort_gradient_flat", "weighted_mean",
+           "init_async_state", "make_async_tick", "resolve_async_shape",
+           "staleness_discount",
            "fedavg_update", "uga_update",
            "make_client_update", "meta_update",
            "meta_update_through_aggregation",

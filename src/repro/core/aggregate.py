@@ -170,6 +170,45 @@ def scan_cohort_gradient_flat(client_update: Callable, w_t: PyTree,
     return list(G), mean_loss
 
 
+def scan_cohort_deltas_flat(client_update: Callable, w_t: PyTree,
+                            cohort_batch: PyTree,
+                            client_weights: jax.Array, lr, rng, *,
+                            spec, loss_weights: Optional[jax.Array] = None
+                            ) -> Tuple[list, jax.Array]:
+    """Client-sequential local updates that KEEP the per-client flat deltas
+    — ``(cohort, rows, LANES)`` stacked buffers per dtype group — instead
+    of accumulating them: the buffered-async pool
+    (:mod:`repro.core.async_round`) needs each delta individually, so the
+    scan's ys-stacking replaces the carry accumulation.  (This gives up the
+    scan strategy's one-delta-alive memory profile; the async runtime pays
+    it because the pool holds per-delta state anyway.)
+
+    Per-client rng split and the sequential loss accumulation order are
+    IDENTICAL to :func:`scan_cohort_gradient_flat`, so feeding these deltas
+    through the same streaming-FMA sequence reproduces the synchronous
+    scan aggregation bit-for-bit — the fault-free async == sync gate."""
+    from repro.core import flat as flat_mod           # lazy: import cycle
+
+    cohort = client_weights.shape[0]
+    rngs = (jax.random.split(rng, cohort) if rng is not None
+            else jnp.zeros((cohort, 2), jnp.uint32))
+    lw32 = (client_weights if loss_weights is None
+            else loss_weights).astype(jnp.float32)
+    lwsum = jnp.maximum(jnp.sum(lw32), 1e-30)
+
+    def body(l_acc, inp):
+        batch, lweight, r = inp
+        g_k, l_k = client_update(
+            w_t, batch, lr, r if rng is not None else None)
+        g_bufs = flat_mod.flatten_tree(spec, g_k)
+        return l_acc + (lweight / lwsum) * l_k, tuple(g_bufs)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    mean_loss, stacked = lax.scan(
+        body, jnp.zeros((), jnp.float32), (cohort_batch, lw32, rngs))
+    return list(stacked), mean_loss
+
+
 def scan_cohort_gradient_coded(client_update: Callable, w_t: PyTree,
                                cohort_batch: PyTree,
                                client_weights: jax.Array, lr, rng, *,

@@ -45,6 +45,7 @@ from repro.kernels.fused_update.ops import (flat_apply_groups,
 PyTree = Any
 
 __all__ = ["ServerEngine", "LegacyTreeEngine", "FusedFlatEngine",
+           "BufferedAsyncEngine",
            "register_engine", "get_engine", "available_engines",
            "resolve_engine", "tree_global_norm"]
 
@@ -176,3 +177,25 @@ class FusedFlatEngine(ServerEngine):
             handle.spec, handle.groups, gn, params, opt_state,
             opt=self._opt, lr=lr, clip_norm=self._clip,
             momentum=self._momentum)
+
+
+@register_engine("buffered_async")
+class BufferedAsyncEngine(FusedFlatEngine):
+    """Fault-tolerant buffered-asynchronous server engine (FedBuff-style).
+
+    The per-flush apply — staleness-weighted mean already streamed into
+    flat buffers, then clip -> optimizer -> parameter write — is inherited
+    unchanged from :class:`FusedFlatEngine`; what changes is the ROUND
+    SHAPE: ``is_async = True`` makes the round builder
+    (``repro.core.round.make_federated_round``) route through the tick
+    program in :mod:`repro.core.async_round`, which holds the bounded
+    delta pool (``state["async"]``), per-delta staleness counters and the
+    every-K-arrivals flush policy.  ``meta_mode='post'`` only: the flush is
+    conditional (``lax.cond``), so there is no fixed aggregation graph for
+    through-aggregation hypergradients to flow through."""
+    name = "buffered_async"
+    is_async = True
+    accepts = frozenset({"flat"})
+    preferred = "flat"
+    meta_capabilities = frozenset({"post"})
+    codec_capabilities = frozenset({"none", "lossy"})

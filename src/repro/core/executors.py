@@ -33,7 +33,8 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregate import cohort_gradient, scan_cohort_gradient_flat
+from repro.core.aggregate import (cohort_gradient, scan_cohort_deltas_flat,
+                                  scan_cohort_gradient_flat)
 from repro.core.flat import FlatSpec, make_flat_spec
 from repro.core.registry import Registry
 from repro.kernels.fused_update.ops import flat_weighted_aggregate
@@ -324,3 +325,73 @@ class ShardedExecutor(CohortExecutor):
             strategy=self._base, agg_dtype=self._agg_dtype,
             spmd_axis_name=self._spmd, grad_shardings=self._shardings)
         return TreeAggregate(G), loss
+
+
+@register_executor("buffered_async")
+class BufferedAsyncExecutor(CohortExecutor):
+    """The buffered-async runtime's cohort stage: runs the local updates
+    with the configured base strategy (``fed.cohort_strategy``: vmap or
+    scan) but returns the **per-client flat deltas** ``(cohort, rows,
+    LANES)`` instead of an aggregate handle — the delta pool
+    (:mod:`repro.core.async_round`) consumes each delta individually, with
+    its own staleness-weighted flush.  Not selectable as a synchronous
+    executor: :meth:`run` raises, pointing at ``engine='buffered_async'``
+    (the round builder routes async engines through the tick program)."""
+    name = "buffered_async"
+    produces = frozenset({"flat"})
+    supports_reweight = False
+    codec_capabilities = frozenset({"none", "lossy"})
+
+    def __init__(self, fed, *, spmd_axis_name=None, grad_shardings=None):
+        if grad_shardings is not None:
+            raise ValueError(
+                "the buffered_async executor keeps a replicated delta pool "
+                "(per-client staleness slots), so per-leaf grad_shardings "
+                "cannot apply; drop grad_shardings or use a synchronous "
+                "engine")
+        if fed.cohort_strategy not in ("vmap", "scan"):
+            raise ValueError(
+                "the buffered_async executor wraps a base cohort_strategy "
+                f"of 'vmap' or 'scan', got {fed.cohort_strategy!r}")
+        self._base = fed.cohort_strategy
+        self._spmd = spmd_axis_name
+
+    def run(self, client_update, params, cohort_batch, client_weights,
+            lr, rng, *, kind):
+        raise NotImplementedError(
+            "the buffered_async executor produces per-delta stacks for the "
+            "async tick program (repro.core.async_round), not a "
+            "synchronous aggregate; select engine='buffered_async' so the "
+            "round builder routes through it")
+
+    def run_deltas(self, client_update, params, cohort_batch,
+                   client_weights, lr, rng, *, spec):
+        """(stacked flat deltas per dtype group, weighted client loss).
+        ``client_weights`` only weight the loss metric here — aggregation
+        weights are the pool's business at flush time."""
+        if self._base == "vmap":
+            from repro.core.flat import flatten_stacked
+            g_stack, loss = cohort_gradient(
+                client_update, params, cohort_batch, client_weights, lr,
+                rng, strategy="vmap", spmd_axis_name=self._spmd,
+                aggregate=False)
+            return flatten_stacked(spec, g_stack), loss
+        return scan_cohort_deltas_flat(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            spec=spec)
+
+    def run_deltas_coded(self, client_update, params, cohort_batch,
+                         client_weights, lr, rng, *, spec, codec, comm):
+        """:meth:`run_deltas` + the lossy uplink: every delta is encoded,
+        (optionally) error-compensated against its ``state["comm"]`` slot
+        and decoded server-side BEFORE pooling — the pool stores what the
+        server actually received.  Returns (decoded stacks, loss,
+        new_residuals)."""
+        from repro.comm.transport import coded_decode_stacked
+        g_groups, loss = self.run_deltas(
+            client_update, params, cohort_batch, client_weights, lr, rng,
+            spec=spec)
+        res = comm["residual"] if comm is not None else None
+        dec, new_res = coded_decode_stacked(codec, spec, g_groups,
+                                            client_weights, res)
+        return dec, loss, new_res

@@ -47,6 +47,7 @@ and history assembly.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -60,6 +61,7 @@ from repro.core.executors import resolve_executor
 from repro.core.flat import make_flat_spec
 from repro.core.meta import meta_update, meta_update_through_cohort
 from repro.models.model import Model
+from repro.sim.faults import client_failed_mask, fault_streams, resolve_faults
 
 PyTree = Any
 
@@ -100,6 +102,11 @@ def init_server_state(model: Model, fed: FedConfig, key, *,
         # Per-client compression residuals (repro.comm): zero EF memory per
         # cohort slot, threaded through checkpoints exactly like ctrl.
         state["comm"] = init_comm_state(fed, make_flat_spec(params))
+    if getattr(eng, "is_async", False):
+        # Buffered-async delta pool + staleness counters: part of server
+        # state, so checkpoints capture a mid-run pool bit-exactly.
+        from repro.core.async_round import init_async_state
+        state["async"] = init_async_state(fed, make_flat_spec(params))
     return state
 
 
@@ -108,14 +115,15 @@ grad_global_norm = tree_global_norm
 
 
 def participation_mask(rng: jax.Array, cohort: int, rate: float) -> jax.Array:
-    """Per-round straggler mask: keep each client with prob ``rate``; if
-    the draw drops the whole cohort, fall back to full participation (an
-    empty round would make Eq. 14 degenerate).  Derived from a fold of the
-    round rng so enabling participation never perturbs the client/meta rng
-    streams."""
+    """Per-round straggler mask: keep each client with prob ``rate``.
+    Derived from a fold of the round rng so enabling participation never
+    perturbs the client/meta rng streams.  An all-zero draw (every client
+    dropped) is legal: the round program guards the server step with
+    ``stepped = sum(weights) > 0`` and leaves params/opt/ctrl bit-unchanged
+    for that round — the old silent fall-back to full participation
+    over-trained exactly when the fleet was at its flakiest."""
     keep = jax.random.bernoulli(jax.random.fold_in(rng, 0x5712A661),
                                 p=rate, shape=(cohort,))
-    keep = jnp.where(jnp.any(keep), keep, jnp.ones_like(keep))
     return keep.astype(jnp.float32)
 
 
@@ -136,6 +144,39 @@ def make_federated_round(model: Model, fed: FedConfig, *,
     into one program.  ``algorithm`` / ``executor`` / ``engine``: registry
     names overriding the ``fed``-derived defaults (``fed.algorithm``,
     ``fed.cohort_strategy`` + shardings, ``fed.fused_update``)."""
+    eng_probe = resolve_engine(fed, engine=engine)
+    if getattr(eng_probe, "is_async", False):
+        # Asynchronous engines replace the whole round SHAPE, not just the
+        # server apply: route to the buffered-async tick program, which
+        # shares one_round's signature so chunking below reuses unchanged.
+        if grad_shardings is not None:
+            raise ValueError(
+                "engine='buffered_async' keeps a replicated delta pool "
+                "(per-client staleness slots), so per-leaf grad_shardings "
+                "cannot apply; drop grad_shardings or use a synchronous "
+                "engine")
+        from repro.core.async_round import make_async_tick
+        return _chunk_rounds(
+            make_async_tick(model, fed, algorithm=algorithm,
+                            executor=executor, engine=engine,
+                            spmd_axis_name=spmd_axis_name),
+            rounds_per_call)
+
+    faults = resolve_faults(fed)
+    if faults.garble > 0:
+        if getattr(fed, "fault_garble", -1.0) >= 0:
+            raise ValueError(
+                f"fault_garble={fed.fault_garble} needs "
+                "engine='buffered_async': payload corruption acts on the "
+                "pooled per-client deltas, which only the async runtime "
+                "models — synchronous engines see faults at the "
+                "aggregation-weight level (drop/crash/timeout). Use the "
+                "buffered_async engine or drop fault_garble.")
+        # profile-carried garble (e.g. fault_profile='flaky') downgrades
+        # silently on sync engines: the profile describes the fleet, and
+        # the sync barrier simply cannot observe payload corruption
+        faults = dataclasses.replace(faults, garble=0.0)
+
     alg = get_algorithm(algorithm if algorithm is not None
                         else fed.algorithm)
     client_update = alg.build(
@@ -144,7 +185,7 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         remat=fed.remat_local_steps)
     exe = resolve_executor(fed, spmd_axis_name=spmd_axis_name,
                            grad_shardings=grad_shardings, executor=executor)
-    eng = resolve_engine(fed, engine=engine)
+    eng = eng_probe
 
     kinds = exe.produces & eng.accepts
     if not kinds:
@@ -232,6 +273,27 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             client_weights = client_weights * mask
             part_metrics = {"participants": jnp.sum(mask)}
 
+        if faults.active:
+            # crash/drop (and, past the round deadline, straggling) zero a
+            # client's aggregation weight — inside the existing weighted
+            # mean, so every executor/engine handles faults unchanged, and
+            # (with EF codecs) a failed client's residual slot freezes
+            fs = fault_streams(rng, client_weights.shape[0], faults)
+            failed = client_failed_mask(fs, faults)
+            client_weights = client_weights * (~failed).astype(jnp.float32)
+            part_metrics = {
+                **part_metrics,
+                "arrivals": jnp.sum((client_weights > 0).astype(
+                    jnp.float32)),
+                "fault_crashed": jnp.sum(fs.crashed.astype(jnp.float32)),
+                "fault_dropped": jnp.sum(fs.dropped.astype(jnp.float32)),
+            }
+            if faults.deadline > 0:
+                late = ((fs.latency + fs.delay.astype(jnp.float32))
+                        > faults.deadline)
+                part_metrics["fault_timeout"] = jnp.sum(
+                    late.astype(jnp.float32))
+
         meta_metrics = {}
         comm_metrics = {}
         new_comm = None
@@ -280,8 +342,31 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             new_state["ctrl"] = new_ctrl
         if use_ef:
             new_state["comm"] = new_comm
+
+        if fed.participation < 1.0 or faults.active:
+            # Degradation policy: a round whose entire cohort failed (mask
+            # or faults) must be a no-op server step — params/opt/ctrl/comm
+            # stay bit-identical (where(True, x, _) is a bitwise identity,
+            # so surviving rounds are untouched).  Only the round counter
+            # advances.  Metric keys stay fixed for lax.scan chunking; the
+            # degenerate round's loss/norm values are gated to 0.
+            stepped = jnp.sum(client_weights) > 0.0
+            new_state = {
+                k: (v if k == "round"
+                    else jax.tree.map(
+                        lambda a, b: jnp.where(stepped, a, b), v, state[k]))
+                for k, v in new_state.items()}
+            for mk in ("client_loss", "grad_norm", "meta_loss"):
+                if mk in metrics:
+                    metrics[mk] = jnp.where(stepped, metrics[mk], 0.0)
         return new_state, metrics
 
+    return _chunk_rounds(one_round, rounds_per_call)
+
+
+def _chunk_rounds(one_round, rounds_per_call: int):
+    """Shared ``rounds_per_call`` wrapper (sync rounds AND async ticks):
+    scan K rounds into one donated program over K-stacked inputs."""
     if rounds_per_call == 1:
         return one_round
 

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import restore as ckpt_restore
 from repro.checkpoint import save as ckpt_save
@@ -42,6 +43,7 @@ from repro.core.round import (RoundFnCache, init_server_state,
                               stack_round_inputs)
 from repro.data.pipeline import FederatedData
 from repro.models.model import Model
+from repro.sim.faults import client_failed_mask, fault_streams, resolve_faults
 
 PyTree = Any
 
@@ -65,6 +67,10 @@ class FederatedTrainer:
         self.key = key if key is not None else jax.random.PRNGKey(seed)
         self.state = init_server_state(model, fed, self.key, engine=engine)
         self.history: List[Dict[str, float]] = []
+        # retry-with-backoff bookkeeping (fed.retry_backoff > 0): failed
+        # client id -> attempts so far, and due round -> ids to re-enqueue
+        self._retry_attempts: Dict[int, int] = {}
+        self._retry_due: Dict[int, List[int]] = {}
 
     # ---- state management -------------------------------------------------
     @property
@@ -99,10 +105,20 @@ class FederatedTrainer:
         t0 = time.time()
         run_history: List[Dict[str, float]] = []
         r = self.round
+        faults = resolve_faults(self.fed)
+        # degradation policy: with faults on and retry_backoff > 0, clients
+        # whose report was lost (crash / drop / past the round deadline) are
+        # re-enqueued retry_backoff * 2^attempt rounds later, retry_max
+        # consecutive failures per client
+        retry_on = (self.fed.retry_backoff > 0 and faults.active
+                    and (faults.crash > 0 or faults.drop > 0
+                         or faults.deadline > 0))
         while r < rounds:
             k = min(self.rounds_per_call, rounds - r)
+            due = [self._retry_due.pop(r + j, None) if retry_on else None
+                   for j in range(k)]
             samples = [data.sample_round(r + j, cohort=cohort, batch=batch,
-                                         share=share)
+                                         share=share, include=due[j])
                        for j in range(k)]
             metas = [self._sample_meta(sample_meta, data, r + j, meta_batch,
                                        samples[j])
@@ -110,9 +126,16 @@ class FederatedTrainer:
             rngs = [jax.random.fold_in(self.key, r + j) for j in range(k)]
             metrics = self._dispatch(samples, metas, rngs)
 
-            # THE record assembly — every driver shares this one
-            recs = [{name: float(v[j]) for name, v in metrics.items()}
+            # THE record assembly — every driver shares this one.  Vector
+            # metrics (e.g. the async runtime's staleness_hist) become
+            # plain lists so records stay JSON-serializable.
+            recs = [{name: (float(v[j]) if jnp.ndim(v[j]) == 0
+                            else np.asarray(v[j], dtype=float).tolist())
+                     for name, v in metrics.items()}
                     for j in range(k)]
+            if retry_on:
+                self._schedule_retries(samples, rngs, recs, due, r, k,
+                                       faults)
             for j, rec in enumerate(recs):
                 rec["round"] = r + j
                 run_history.append(rec)
@@ -122,12 +145,39 @@ class FederatedTrainer:
                     log_fn(f"[train] round {r + j:4d} " +
                            " ".join(f"{name}={v:.4f}"
                                     for name, v in rec.items()
-                                    if name != "round") +
+                                    if name != "round"
+                                    and isinstance(v, float)) +
                            f" ({time.time() - t0:.1f}s)")
             if on_records is not None:
                 on_records(recs, self)
             r += k
         return run_history
+
+    def _schedule_retries(self, samples, rngs, recs, due, r, k, faults):
+        """Host-side mirror of the jitted round's fault draws: the fold in
+        :func:`repro.sim.faults.fault_streams` is deterministic in the
+        round rng, so recomputing the streams here agrees bit-for-bit with
+        what the device masked out.  Failed clients are re-enqueued with
+        exponential backoff, deferred past the current chunk (the chunk's
+        cohorts were already sampled)."""
+        cohort = len(samples[0]["clients"])
+        for j in range(k):
+            fs = fault_streams(rngs[j], cohort, faults)
+            failed = np.asarray(client_failed_mask(fs, faults))
+            clients = np.asarray(samples[j]["clients"])
+            recs[j]["retried"] = float(len(set(due[j] or [])
+                                          & set(clients.tolist())))
+            for cid in clients[~failed]:
+                self._retry_attempts.pop(int(cid), None)
+            for cid in clients[failed]:
+                cid = int(cid)
+                a = self._retry_attempts.get(cid, 0)
+                if a >= self.fed.retry_max:
+                    continue
+                self._retry_attempts[cid] = a + 1
+                due_round = max(r + j + self.fed.retry_backoff * (2 ** a),
+                                r + k)
+                self._retry_due.setdefault(due_round, []).append(cid)
 
     def _sample_meta(self, sample_meta, data, round_idx, meta_batch, sample):
         if sample_meta is not None:

@@ -23,6 +23,11 @@ class FederatedData:
     meta_indices: Optional[np.ndarray] = None
     shared_indices: Optional[np.ndarray] = None   # FedShare global set
     seed: int = 0
+    client_speeds: Optional[np.ndarray] = None    # (num_clients,) relative
+                                        # compute speeds for simulated-time
+                                        # accounting (see repro.sim.faults.
+                                        # heavy_tail_speeds); sample_round
+                                        # ships the cohort's slice when set
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -35,9 +40,18 @@ class FederatedData:
         return {k: v[idx] for k, v in self.arrays.items()}
 
     def sample_round(self, round_idx: int, *, cohort: int, batch: int,
-                     share: bool = False, share_fraction: float = 0.5
+                     share: bool = False, share_fraction: float = 0.5,
+                     include: Optional[Sequence[int]] = None
                      ) -> Dict:
-        """Returns {'cohort_batch', 'client_weights', 'clients'}."""
+        """Returns {'cohort_batch', 'client_weights', 'clients'}.
+
+        ``include``: client ids that MUST be in this round's cohort — the
+        trainer's retry-with-backoff policy re-enqueues clients whose
+        report was lost to a fault.  They overwrite cohort slots whose
+        random draw is not itself in ``include`` (so at most ``cohort``
+        retries land per round).  The rng call sequence is identical for
+        ``include=None`` / ``include=[]``, keeping retry-free streams
+        bit-identical to historical runs."""
         if cohort > self.num_clients:
             # numpy's replace=False error ("Cannot take a larger sample...")
             # names neither quantity; fail with both numbers and the fix
@@ -48,6 +62,14 @@ class FederatedData:
                 "clients")
         rng = np.random.default_rng((self.seed, round_idx))
         clients = rng.choice(self.num_clients, size=cohort, replace=False)
+        if include:
+            want = [int(c) for c in dict.fromkeys(include)
+                    if 0 <= int(c) < self.num_clients]
+            missing = [c for c in want if c not in set(clients.tolist())]
+            free = [i for i, c in enumerate(clients.tolist())
+                    if c not in set(want)]
+            for slot, c in zip(free, missing[:cohort]):
+                clients[slot] = c
         batches, weights = [], []
         n_share = int(batch * share_fraction) if share else 0
         if n_share and self.shared_indices is None:
@@ -72,11 +94,15 @@ class FederatedData:
             weights.append(idx.size)
         cohort_batch = {k: np.stack([b[k] for b in batches])
                         for k in batches[0]}
-        return {
+        sample = {
             "cohort_batch": cohort_batch,
             "client_weights": np.asarray(weights, np.float32),
             "clients": clients,
         }
+        if self.client_speeds is not None:
+            sample["client_speeds"] = np.asarray(
+                self.client_speeds, np.float32)[clients]
+        return sample
 
     def sample_meta(self, round_idx: int, batch: int) -> Dict[str, np.ndarray]:
         assert self.meta_indices is not None, "no meta set configured"

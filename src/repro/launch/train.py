@@ -75,7 +75,14 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  ckpt_path: Optional[str] = None,
                  resume: Optional[str] = None, strategy: str = "vmap",
                  dtype=jnp.float32, fused: bool = False,
-                 rounds_per_call: int = 1):
+                 rounds_per_call: int = 1, engine: Optional[str] = None,
+                 async_buffer: int = 0, async_capacity: int = 0,
+                 async_max_staleness: int = 0,
+                 staleness_mode: str = "invsqrt",
+                 fault_profile: str = "none", fault_drop: float = -1.0,
+                 fault_crash: float = -1.0, fault_delay: float = -1.0,
+                 fault_max_delay: int = -1, fault_garble: float = -1.0,
+                 round_deadline: float = 0.0, retry_backoff: int = 0):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
     and metrics sync to host once per K rounds.  ``fused``: flat-buffer
     Pallas server engine (see kernels/fused_update).  ``resume``: path of a
@@ -92,7 +99,15 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         server_opt=server_opt, meta_mode=meta_mode, ctrl_lr=ctrl_lr,
         participation=participation, codec=codec,
         error_feedback=error_feedback, topk_ratio=topk_ratio,
-        cohort_strategy=strategy, lr_decay=0.992, fused_update=fused)
+        cohort_strategy=strategy, lr_decay=0.992, fused_update=fused,
+        engine=engine, async_buffer=async_buffer,
+        async_capacity=async_capacity,
+        async_max_staleness=async_max_staleness,
+        staleness_mode=staleness_mode, fault_profile=fault_profile,
+        fault_drop=fault_drop, fault_crash=fault_crash,
+        fault_delay=fault_delay, fault_max_delay=fault_max_delay,
+        fault_garble=fault_garble, round_deadline=round_deadline,
+        retry_backoff=retry_backoff)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
                                     seed=seed)
@@ -191,6 +206,48 @@ def main():
                     help="fused flat-buffer Pallas server engine")
     ap.add_argument("--rounds-per-call", type=int, default=1,
                     help="scan K rounds into one compiled program")
+    from repro.core import available_engines
+    from repro.sim.faults import FAULT_PROFILES
+    ap.add_argument("--engine", default=None,
+                    choices=list(available_engines()),
+                    help="server-engine registry name (default derives "
+                         "legacy_tree/fused_flat from --fused); "
+                         "'buffered_async' selects the fault-tolerant "
+                         "buffered asynchronous runtime")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="buffered_async: server steps every K arrived "
+                         "deltas (0: cohort)")
+    ap.add_argument("--async-capacity", type=int, default=0,
+                    help="buffered_async: delta-pool slots (0: 2*cohort)")
+    ap.add_argument("--async-max-staleness", type=int, default=0,
+                    help="buffered_async: evict deltas staler than this "
+                         "many server versions (0: unbounded)")
+    ap.add_argument("--staleness-mode", default="invsqrt",
+                    choices=["none", "inv", "invsqrt"],
+                    help="flush-weight discount of stale deltas")
+    ap.add_argument("--fault-profile", default="none",
+                    choices=sorted(FAULT_PROFILES),
+                    help="named client-fault profile (repro.sim.faults); "
+                         "--fault-* flags override individual rates")
+    ap.add_argument("--fault-drop", type=float, default=-1.0,
+                    help="P(uplink report lost); <0 uses the profile")
+    ap.add_argument("--fault-crash", type=float, default=-1.0,
+                    help="P(client dies mid-round); <0 uses the profile")
+    ap.add_argument("--fault-delay", type=float, default=-1.0,
+                    help="P(report arrives rounds late); <0 uses the "
+                         "profile")
+    ap.add_argument("--fault-max-delay", type=int, default=-1,
+                    help="late reports land 1..N rounds late; <0 uses the "
+                         "profile")
+    ap.add_argument("--fault-garble", type=float, default=-1.0,
+                    help="P(payload corrupted) — buffered_async only; <0 "
+                         "uses the profile")
+    ap.add_argument("--round-deadline", type=float, default=0.0,
+                    help="sync barrier timeout in simulated round-units "
+                         "(0: wait forever)")
+    ap.add_argument("--retry-backoff", type=int, default=0,
+                    help=">0: re-enqueue failed clients after "
+                         "backoff * 2^attempt rounds")
     args = ap.parse_args()
     state, history = run_training(
         args.arch, rounds=args.rounds, cohort=args.cohort,
@@ -206,7 +263,15 @@ def main():
         log_every=args.log_every,
         examples=args.examples, iid=args.iid, seed=args.seed,
         ckpt_path=args.ckpt, resume=args.resume, fused=args.fused,
-        rounds_per_call=args.rounds_per_call)
+        rounds_per_call=args.rounds_per_call, engine=args.engine,
+        async_buffer=args.async_buffer, async_capacity=args.async_capacity,
+        async_max_staleness=args.async_max_staleness,
+        staleness_mode=args.staleness_mode,
+        fault_profile=args.fault_profile, fault_drop=args.fault_drop,
+        fault_crash=args.fault_crash, fault_delay=args.fault_delay,
+        fault_max_delay=args.fault_max_delay,
+        fault_garble=args.fault_garble, round_deadline=args.round_deadline,
+        retry_backoff=args.retry_backoff)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

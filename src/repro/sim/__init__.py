@@ -1,0 +1,15 @@
+"""Client-behavior simulation (repro.sim) — the fault/latency models the
+fault-tolerant runtime trains against.
+
+:mod:`repro.sim.faults` owns the seeded per-round fault streams
+(drop / crash / delay / garble) and the heavy-tail client latency model the
+async engine's throughput accounting and the sync round-deadline policy
+share.
+"""
+from repro.sim.faults import (FAULT_PROFILES, FaultConfig, FaultStreams,
+                              client_failed_mask, fault_streams,
+                              heavy_tail_speeds, resolve_faults)
+
+__all__ = ["FAULT_PROFILES", "FaultConfig", "FaultStreams",
+           "client_failed_mask", "fault_streams", "heavy_tail_speeds",
+           "resolve_faults"]

@@ -1,0 +1,209 @@
+"""Seeded client fault injection: the traffic model of the fault-tolerant
+async runtime (``repro.core.async_round``) and of the sync round-deadline
+policy.
+
+Production FL traffic is not the synchronous lockstep of the paper's
+Eq. (14) round: clients crash mid-round, drop their uplink report, deliver
+it rounds late, or deliver a corrupted payload, and their completion times
+are heavy-tailed.  This module models all of that as **per-round streams
+derived from the round rng** — :func:`fault_streams` folds a dedicated
+constant out of the round key exactly like the participation mask
+(``repro.core.round.participation_mask``), so
+
+  * the streams are deterministic under the run seed,
+  * they are invariant to ``rounds_per_call`` chunking (each round's key is
+    ``fold_in(run_key, round_idx)`` no matter how rounds are batched), and
+  * a fault-free config (``FaultConfig.active == False``) never draws from
+    the fold at all, keeping historical runs bit-identical.
+
+Fault taxonomy (per client, per round):
+
+  * **crash** — the client dies mid-round: no local result exists at all;
+  * **drop**  — local compute finishes but the uplink report is lost;
+  * **delay** — the report arrives ``1..max_delay`` rounds late (the async
+    pool buffers it; a sync barrier just waits, unless ``round_deadline``
+    times it out);
+  * **garble** — the report arrives but the payload is corrupted (scaled by
+    ``U(-garble_scale, garble_scale)``).  Only the buffered-async delta
+    pool models payload corruption; sync engines treat faults at the
+    weight level, so profile-carried garble is zeroed there (an *explicit*
+    ``fault_garble`` on a sync engine is a config error).
+
+Latency model (for simulated-time throughput accounting and the sync
+deadline): client k completes at ``Exp(stagger) + LogNormal(0,
+speed_tail)`` round-units — exponential dispatch jitter (the server sees a
+Poisson-like arrival superposition) plus a heavy-tail compute time — with
+any delay fault added on top in whole rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold constant separating the fault streams from the round's client/meta
+# keys and from the participation mask's 0x5712A661 fold
+FAULT_FOLD = 0x00FA0175
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round client fault rates + the latency model.  Frozen and
+    hashable so round builders can close over it as a static value."""
+    drop: float = 0.0           # P(uplink report lost after local compute)
+    crash: float = 0.0          # P(client dies mid-round, nothing reported)
+    delay: float = 0.0          # P(report arrives late)
+    max_delay: int = 0          # late reports arrive U{1..max_delay} rounds late
+    garble: float = 0.0         # P(delivered payload corrupted) — async only
+    garble_scale: float = 4.0   # corrupted payloads scale by U(-s, s)
+    speed_tail: float = 0.5     # lognormal sigma of client compute time
+    stagger: float = 0.1        # Exp(stagger) dispatch jitter (Poisson arrivals)
+    deadline: float = 0.0       # sync barrier timeout in simulated round-units
+                                # (0: wait forever); copied from
+                                # FedConfig.round_deadline by resolve_faults
+
+    @property
+    def active(self) -> bool:
+        """True iff a round under this config must draw fault streams.
+        Gating on this keeps fault-free rounds bit-identical to pre-fault
+        builds (no extra rng folds, no extra ops in the jitted graph)."""
+        return (self.drop > 0 or self.crash > 0
+                or (self.delay > 0 and self.max_delay > 0)
+                or self.garble > 0 or self.deadline > 0)
+
+
+# named profiles selectable via FedConfig.fault_profile / --fault-profile;
+# individual fault_* fields override a profile's numbers
+FAULT_PROFILES = {
+    "none": dict(),
+    # a generally unreliable fleet: some of everything
+    "flaky": dict(drop=0.08, crash=0.05, delay=0.15, max_delay=3,
+                  garble=0.02, garble_scale=4.0, speed_tail=0.5),
+    # the benchmark's 20%-stragglers arm: no losses, only lateness
+    "stragglers": dict(delay=0.20, max_delay=4, speed_tail=1.0),
+}
+
+# (FedConfig field, FaultConfig field) pairs an explicit >= 0 value of
+# which overrides the profile default
+_OVERRIDES = (("fault_drop", "drop"), ("fault_crash", "crash"),
+              ("fault_delay", "delay"), ("fault_max_delay", "max_delay"),
+              ("fault_garble", "garble"),
+              ("fault_garble_scale", "garble_scale"),
+              ("fault_speed_tail", "speed_tail"))
+
+
+def resolve_faults(fed) -> FaultConfig:
+    """``FedConfig -> FaultConfig``: profile defaults + explicit ``fault_*``
+    overrides (a negative override means "use the profile's value"), with
+    the rate/shape validation that makes bad knobs loud at config time."""
+    profile = getattr(fed, "fault_profile", "none")
+    if profile not in FAULT_PROFILES:
+        raise ValueError(
+            f"unknown fault_profile {profile!r}; known profiles: "
+            f"{sorted(FAULT_PROFILES)} (rates are overridable per-field "
+            "via the fault_* knobs)")
+    kw = dict(FAULT_PROFILES[profile])
+    for fed_field, fc_field in _OVERRIDES:
+        v = getattr(fed, fed_field, -1)
+        if v is not None and v >= 0:
+            kw[fc_field] = int(v) if fc_field == "max_delay" else float(v)
+    kw["deadline"] = float(getattr(fed, "round_deadline", 0.0))
+    fc = FaultConfig(**kw)
+    for rate_field in ("drop", "crash", "delay", "garble"):
+        rate = getattr(fc, rate_field)
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(
+                f"fault_{rate_field}={rate} must be in [0, 1]: it is a "
+                "per-client per-round probability")
+    if fc.delay > 0 and fc.max_delay < 1:
+        raise ValueError(
+            f"fault_delay={fc.delay} > 0 needs fault_max_delay >= 1 "
+            "(late reports arrive 1..max_delay rounds late), got "
+            f"{fc.max_delay}")
+    if fc.garble_scale <= 0 or fc.speed_tail < 0 or fc.stagger < 0:
+        raise ValueError(
+            f"garble_scale={fc.garble_scale} must be > 0 and "
+            f"speed_tail={fc.speed_tail} / stagger={fc.stagger} must be "
+            ">= 0")
+    if fc.deadline < 0:
+        raise ValueError(
+            f"round_deadline={fc.deadline} must be >= 0 (simulated "
+            "round-units the sync barrier waits before timing a client "
+            "out; 0 waits forever)")
+    return fc
+
+
+class FaultStreams(NamedTuple):
+    """One round's fault draws over the cohort (all shape ``(cohort,)``).
+    ``alive`` is the float mask of clients whose report reaches the server
+    at all; ``latency`` is the simulated completion time in round-units
+    EXCLUDING the delay fault (add ``delay`` for arrival time)."""
+    alive: jax.Array            # f32 0/1: neither crashed nor dropped
+    crashed: jax.Array          # bool
+    dropped: jax.Array          # bool (uplink lost; excludes crashed)
+    delayed: jax.Array          # bool (among alive)
+    delay: jax.Array            # int32 rounds late (0 for on-time/dead)
+    garbled: jax.Array          # bool (among alive)
+    garble_mult: jax.Array      # f32 payload multiplier (exactly 1.0 unless garbled)
+    latency: jax.Array          # f32 completion time (round-units)
+
+
+def fault_streams(rng: jax.Array, cohort: int, fc: FaultConfig
+                  ) -> FaultStreams:
+    """Draw one round's fault streams from the round rng.
+
+    The fold keeps the draw independent of the client/meta splits and the
+    participation mask; callers gate on ``fc.active`` so fault-free configs
+    never reach this function inside a jitted round."""
+    key = jax.random.fold_in(rng, FAULT_FOLD)
+    (k_crash, k_drop, k_delay, k_late, k_garb, k_scale, k_speed,
+     k_start) = jax.random.split(key, 8)
+    crashed = jax.random.bernoulli(k_crash, fc.crash, (cohort,))
+    dropped = jnp.logical_and(
+        jax.random.bernoulli(k_drop, fc.drop, (cohort,)), ~crashed)
+    alive_b = ~(crashed | dropped)
+    delayed = jnp.logical_and(
+        jax.random.bernoulli(k_delay, fc.delay, (cohort,)), alive_b)
+    late = jax.random.randint(k_late, (cohort,), 1, max(fc.max_delay, 1) + 1)
+    delay = jnp.where(delayed, late, 0).astype(jnp.int32)
+    garbled = jnp.logical_and(
+        jax.random.bernoulli(k_garb, fc.garble, (cohort,)), alive_b)
+    scale = jax.random.uniform(k_scale, (cohort,), jnp.float32,
+                               -fc.garble_scale, fc.garble_scale)
+    # exactly 1.0 for ungarbled clients: x * 1.0 is an IEEE identity, so a
+    # garble-free draw leaves every delta bit-identical
+    garble_mult = jnp.where(garbled, scale, jnp.float32(1.0))
+    compute = jnp.exp(fc.speed_tail
+                      * jax.random.normal(k_speed, (cohort,), jnp.float32))
+    start = fc.stagger * jax.random.exponential(k_start, (cohort,),
+                                                jnp.float32)
+    return FaultStreams(alive=alive_b.astype(jnp.float32), crashed=crashed,
+                        dropped=dropped, delayed=delayed, delay=delay,
+                        garbled=garbled, garble_mult=garble_mult,
+                        latency=start + compute)
+
+
+def client_failed_mask(fs: FaultStreams, fc: FaultConfig) -> jax.Array:
+    """Bool (cohort,): clients whose report the server never observes this
+    round — crashed, dropped, or (sync barrier only) past the deadline.
+    The trainer's retry-with-backoff policy recomputes this host-side from
+    the same round rng, so it agrees bit-for-bit with the jitted round."""
+    failed = ~(fs.alive > 0)
+    if fc.deadline > 0:
+        late = (fs.latency + fs.delay.astype(jnp.float32)) > fc.deadline
+        failed = failed | late
+    return failed
+
+
+def heavy_tail_speeds(seed: int, num_clients: int,
+                      sigma: float = 0.5) -> np.ndarray:
+    """Persistent per-client relative speeds, lognormal with median 1 —
+    the host-side hook for heterogeneous fleets: attach the result as
+    ``FederatedData.client_speeds`` and ``sample_round`` ships the selected
+    cohort's slice for simulated-time accounting (benchmarks, deadline
+    studies)."""
+    rng = np.random.default_rng((seed, 0x5BEED))
+    return np.exp(sigma * rng.standard_normal(num_clients)).astype(np.float32)
