@@ -141,3 +141,40 @@ def run_methods(model, data, *, methods: Sequence[str], rounds: int,
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def peak_memory_bytes(fn: Callable, *args, **kwargs) -> Dict[str, int]:
+    """Peak-HBM measurement for one jittable callable.
+
+    Primary source: ``jax.jit(fn).lower(*args).compile().memory_analysis()``
+    — XLA's compiled-program accounting.  ``temp_bytes`` (scratch the
+    program allocates between its inputs and outputs) is THE number for
+    memory-scaling gates: argument/output sizes grow with e.g. the cohort
+    by construction, while the temp footprint is what streaming/chunking
+    actually bounds.  Falls back to measuring live device arrays around an
+    executed call on backends whose memory analysis is unavailable
+    (``temp_bytes = -1`` then, so gates can skip instead of silently
+    passing on the wrong quantity).
+
+    Returns {"temp_bytes", "argument_bytes", "output_bytes",
+    "generated_code_bytes", "live_bytes"} (missing entries -1)."""
+    out = {"temp_bytes": -1, "argument_bytes": -1, "output_bytes": -1,
+           "generated_code_bytes": -1, "live_bytes": -1}
+    try:
+        compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+        mem = compiled.memory_analysis()
+        out["temp_bytes"] = int(mem.temp_size_in_bytes)
+        out["argument_bytes"] = int(mem.argument_size_in_bytes)
+        out["output_bytes"] = int(mem.output_size_in_bytes)
+        out["generated_code_bytes"] = int(mem.generated_code_size_in_bytes)
+    except Exception:
+        # fallback: run once and count live device buffers (includes the
+        # inputs/outputs themselves — coarser, but monotone in the same
+        # blow-ups the gates guard against)
+        res = jax.block_until_ready(jax.jit(fn)(*args, **kwargs))
+        live = 0
+        for d in jax.live_arrays():
+            live += d.nbytes
+        del res
+        out["live_bytes"] = int(live)
+    return out

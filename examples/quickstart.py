@@ -3,7 +3,9 @@
 Three registries + one facade (see repro/core/__init__.py):
 
   * ClientAlgorithm  — what a client computes   (--algorithm uga/fednova/...)
-  * CohortExecutor   — how the cohort runs      (vmap / scan / sharded)
+  * CohortExecutor   — how the cohort runs      (vmap / scan / chunked /
+                                                 sharded — all registrations
+                                                 over one streaming core)
   * ServerEngine     — the server update        (legacy_tree / fused_flat)
   * FederatedTrainer — the driver loop          (jit cache, chunking,
                                                  checkpoint/resume, history)
@@ -68,4 +70,20 @@ rec = FederatedTrainer(model, fed_async, seed=0).run(
 print(f"buffered async under faults: arrivals={rec['arrivals']:.0f} "
       f"server_steps={rec['server_steps']:.0f} "
       f"staleness_mean={rec['staleness_mean']:.2f} "
+      f"client_loss={rec['client_loss']:.4f}")
+
+# 7. big cohorts without big memory: cohort_chunk streams 16 clients at a
+# time through the flat accumulators (the train.py flag is --cohort-chunk),
+# so a 256-client round peaks at one chunk of gradients — the result is
+# BITWISE the same at any chunk size (see BENCH_cohort_scaling.json for the
+# cohort=1024 flat-memory numbers).  Same model, a 256-client fleet:
+tokens_big = rng.integers(0, cfg.vocab_size, (512, 65)).astype(np.int32)
+data_big = FederatedData(arrays={"tokens": tokens_big},
+                         client_indices=[np.arange(i * 2, (i + 1) * 2)
+                                         for i in range(256)], seed=0)
+fed_chunk = dataclasses.replace(fed, cohort=256, cohort_chunk=16,
+                                meta=False, fused_update=True)
+rec = FederatedTrainer(model, fed_chunk, seed=0).run(
+    data_big, rounds=1, cohort=256, batch=2)[-1]
+print(f"chunked streaming: cohort=256 in 16-client chunks, "
       f"client_loss={rec['client_loss']:.4f}")

@@ -3,17 +3,20 @@ accumulate over the flat dtype-group buffers, plus the per-client
 error-feedback state and the measured-bytes accounting.
 
 The server-side aggregate of decoded gradients is a streaming accumulation
-(one client at a time), so both cohort executors share
+(one client at a time), so every cohort executor shares
 :func:`client_coded_accumulate`:
 
-  * the scan executor calls it inside its cohort scan (the client gradient
-    is already computed one at a time there — see
-    :func:`repro.core.aggregate.scan_cohort_gradient_coded`);
-  * the vmap executor computes the per-client gradients in parallel as
-    usual, then runs :func:`coded_aggregate_stacked` — a ``lax.scan`` over
-    the stacked cohort axis — for the codec stage (encode/decode is a few
+  * the chunked streaming core (which the chunked/vmap/scan registrations
+    and each shard of the two-tier sharded topology all run —
+    :func:`repro.core.aggregate.chunked_cohort_gradient_coded`) computes a
+    chunk of client gradients in parallel, then runs
+    :func:`coded_aggregate_stacked` — a ``lax.scan`` over the chunk's
+    stacked cohort axis — for the codec stage (encode/decode is a few
     flat sweeps per client, negligible next to the local updates, and the
-    scan keeps the Pallas codec kernels un-batched).
+    scan keeps the Pallas codec kernels un-batched);
+  * the legacy scan path calls it directly inside its cohort scan (the
+    client gradient is already computed one at a time there — see
+    :func:`repro.core.aggregate.scan_cohort_gradient_coded`).
 
 Error-feedback state layout (``state["comm"]``): ``{"residual": tuple}``
 with one ``(cohort, rows, LANES)`` fp32 buffer per dtype group — client k's

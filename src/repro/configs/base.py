@@ -227,7 +227,23 @@ class FedConfig:
     prox_mu: float = 2e-4               # FedProx coefficient
     server_opt: str = "sgd"             # sgd | sgdm | adam | yogi
     server_momentum: float = 0.0
-    cohort_strategy: str = "vmap"       # vmap (client-parallel) | scan (client-sequential)
+    cohort_strategy: str = "vmap"       # vmap (client-parallel) | scan
+                                        # (client-sequential) | chunked
+                                        # (cohort_chunk-client slices)
+    cohort_chunk: Optional[int] = None  # >=1: stream the cohort through the
+                                        # chunked executor in slices of this
+                                        # many clients — vmap within a
+                                        # slice, Pallas FMA accumulation
+                                        # across slices, so peak gradient
+                                        # memory is one chunk instead of the
+                                        # whole cohort.  Results are
+                                        # bit-identical for every chunk size
+                                        # (a ragged final chunk is padded
+                                        # with zero-weight clients).  None
+                                        # keeps the configured
+                                        # cohort_strategy; incompatible with
+                                        # cohort_strategy='scan' (scan IS
+                                        # the chunk=1 pin of the same core).
     remat_local_steps: bool = True      # jax.checkpoint each keep-trace step
     lr_decay: float = 1.0               # multiplicative per-round client-lr decay
     grad_agg_dtype: str = "float32"     # dtype of the aggregated gradient
@@ -340,6 +356,28 @@ class FedConfig:
                 f"registered base cohort executors: {base_strategies} "
                 "(the 'sharded' executor is selected by passing "
                 "grad_shardings to make_federated_round, not here)")
+        if self.cohort_chunk is not None:
+            if self.cohort_chunk < 1:
+                raise ValueError(
+                    f"cohort_chunk={self.cohort_chunk} must be >= 1: it is "
+                    "the number of clients the chunked executor vmaps per "
+                    "streaming slice (a ragged final chunk is padded with "
+                    "zero-weight clients, never truncated)")
+            if self.cohort_strategy == "scan":
+                raise ValueError(
+                    f"cohort_chunk={self.cohort_chunk} together with "
+                    "cohort_strategy='scan' is ambiguous: scan IS the "
+                    "chunked streaming core pinned at chunk=1 (one client "
+                    "alive at a time). Drop cohort_chunk to keep scan, or "
+                    "drop cohort_strategy='scan' (keep the default 'vmap' "
+                    "or set 'chunked') so cohort_chunk selects the slice "
+                    "size.")
+        elif self.cohort_strategy == "chunked":
+            raise ValueError(
+                "cohort_strategy='chunked' needs cohort_chunk set: the "
+                "chunked executor streams the cohort in cohort_chunk-client "
+                "slices. Set e.g. cohort_chunk=8, or use cohort_strategy="
+                "'vmap' / 'scan'.")
         assert self.local_steps >= 1
         assert self.local_epochs >= 1
         if not 0.0 < self.participation <= 1.0:

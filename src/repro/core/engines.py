@@ -162,9 +162,9 @@ class FusedFlatEngine(ServerEngine):
 
     def apply(self, params, handle, opt_state, *, lr):
         if isinstance(handle, TreeAggregate):
-            # pre-aggregated (sharded) cohorts: run the engine over a
-            # one-client stack so the flat layout never has to express the
-            # sharding constraints (the pre-redesign fallback, unchanged)
+            # pre-aggregated tree handles (custom executors; the built-in
+            # four all produce flat): run the engine over a one-client
+            # stack so the flat layout needn't re-express the tree
             g_stack = jax.tree.map(lambda x: x[None], handle.tree)
             return fused_server_update(
                 params, g_stack, jnp.ones((1,), jnp.float32), opt_state,

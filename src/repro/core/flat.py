@@ -45,6 +45,12 @@ class GroupSpec:
     leaves: Tuple[LeafSpec, ...]
     size: int                      # total elements (before padding)
     rows: int                      # padded row count: rows * LANES >= size
+    # optional jax.sharding.PartitionSpec for the (rows, LANES) buffer —
+    # attached by the two-tier sharded executor (via
+    # repro.sharding.specs.flat_group_pspecs) so engines can keep the
+    # aggregate buffers row-partitioned across the model axis instead of
+    # replicating them after the cross-shard psum.  None = replicated.
+    pspec: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,14 +125,21 @@ def flatten_stacked(spec: FlatSpec, tree: PyTree) -> List[jax.Array]:
     return out
 
 
-def unflatten_tree(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
-    """Inverse of :func:`flatten_tree` — original structure/shapes/dtypes."""
+def unflatten_tree(spec: FlatSpec, bufs: Sequence[jax.Array],
+                   dtype=None) -> PyTree:
+    """Inverse of :func:`flatten_tree` — original structure/shapes/dtypes.
+
+    ``dtype`` overrides the cast-back target for every leaf: the chunked
+    executor's tree handle aggregates in fp32 flat buffers but must hand
+    the engine a tree in ``grad_agg_dtype`` (one cast, not a lossy
+    fp32 -> leaf-dtype -> agg-dtype double hop)."""
     leaves: List[Any] = [None] * spec.num_leaves
     for g, buf in zip(spec.groups, bufs):
         flat = buf.reshape(g.rows * LANES)
         for l in g.leaves:
             x = jax.lax.slice(flat, (l.offset,), (l.offset + l.size,))
-            leaves[l.index] = x.reshape(l.shape).astype(jnp.dtype(l.dtype))
+            leaves[l.index] = x.reshape(l.shape).astype(
+                jnp.dtype(l.dtype) if dtype is None else jnp.dtype(dtype))
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
@@ -146,6 +159,35 @@ def unflatten_stacked(spec: FlatSpec, bufs: Sequence[jax.Array]) -> PyTree:
             leaves[l.index] = x.reshape((cohort,) + l.shape).astype(
                 jnp.dtype(l.dtype))
     return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def with_pspecs(spec: FlatSpec, pspecs: Sequence[Any]) -> FlatSpec:
+    """Attach one ``PartitionSpec`` per dtype group (see
+    :func:`repro.sharding.specs.flat_group_pspecs`).  The spec stays a
+    static trace-time constant — the pspec rides along exactly like
+    ``rows`` so every consumer of the group buffers (engines, codecs,
+    checkpointing) can recover the intended placement."""
+    assert len(pspecs) == len(spec.groups), (len(pspecs), len(spec.groups))
+    return FlatSpec(treedef=spec.treedef, groups=tuple(
+        dataclasses.replace(g, pspec=p)
+        for g, p in zip(spec.groups, pspecs)))
+
+
+def constrain_groups(spec: FlatSpec, bufs: Sequence[jax.Array],
+                     mesh=None) -> List[jax.Array]:
+    """Apply each group's ``pspec`` as a ``with_sharding_constraint`` so
+    GSPMD keeps the aggregate buffers partitioned (a no-op for groups
+    without a pspec, or when no mesh is known)."""
+    if mesh is None:
+        return list(bufs)
+    from jax.sharding import NamedSharding
+    out = []
+    for g, b in zip(spec.groups, bufs):
+        if g.pspec is not None:
+            b = jax.lax.with_sharding_constraint(
+                b, NamedSharding(mesh, g.pspec))
+        out.append(b)
+    return out
 
 
 def zeros_flat(spec: FlatSpec) -> List[jax.Array]:

@@ -213,10 +213,11 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         raise ValueError(
             f"meta_mode='through_aggregation' needs a cohort executor that "
             f"supports reweightable aggregation, but {exe.name!r} does "
-            "not: sharded cohorts (grad_shardings) pre-aggregate per leaf, "
-            "so per-client weight hypergradients are unavailable. Drop "
-            "grad_shardings (vmap/scan cohorts both support "
-            "through_aggregation) or use meta_mode='post'.")
+            "not. Every built-in synchronous executor (vmap/scan/chunked "
+            "and the two-tier sharded topology) supports it; only "
+            "custom executors without a reweightable form and the async "
+            "delta pool lack the per-client weight hypergradients. Use "
+            "one of those executors or meta_mode='post'.")
 
     # lazy: repro.comm imports repro.core.flat, which triggers this package
     from repro.comm import comm_bytes_per_client, resolve_codec
@@ -240,11 +241,12 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             raise ValueError(
                 f"codec={fed.codec!r} needs a cohort executor declaring "
                 f"the 'lossy' codec capability, but {exe.name!r} declares "
-                f"{sorted(exe.codec_capabilities)}: sharded cohorts "
-                "(grad_shardings) pre-aggregate per leaf, so there is no "
-                "per-client uplink to compress. Drop grad_shardings "
-                "(vmap/scan cohorts both support codecs) or use "
-                "codec='none'.")
+                f"{sorted(exe.codec_capabilities)}. Every built-in "
+                "executor (vmap/scan/chunked/sharded and the async delta "
+                "pool) streams a per-client uplink and declares 'lossy'; "
+                "a custom executor that pre-aggregates before the uplink "
+                "cannot compress per client. Use one of the built-in "
+                "executors or codec='none'.")
         if "lossy" not in eng.codec_capabilities:
             raise ValueError(
                 f"codec={fed.codec!r} needs a server engine declaring the "

@@ -34,6 +34,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _mesh(shape, axes, devices[:n])
 
 
+def make_auto_mesh(model: int = 1):
+    """All visible devices as one (data, model) mesh — the default for
+    ``train.py --executor sharded``: the data axis (cohort sharding for the
+    two-tier aggregation) takes every device the model axis doesn't."""
+    n = len(jax.devices())
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model={model} must be >= 1 and divide the device count {n}")
+    return _mesh((n // model, model), ("data", "model"), jax.devices())
+
+
 def make_debug_mesh(data: int = 1, model: int = 1, *, pod: int = 0):
     """Small mesh for smoke tests (uses however many devices exist)."""
     if pod:

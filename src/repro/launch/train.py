@@ -74,6 +74,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  iid: bool = False, seed: int = 0, log_every: int = 10,
                  ckpt_path: Optional[str] = None,
                  resume: Optional[str] = None, strategy: str = "vmap",
+                 cohort_chunk: Optional[int] = None,
+                 executor: Optional[str] = None, mesh_model: int = 1,
                  dtype=jnp.float32, fused: bool = False,
                  rounds_per_call: int = 1, engine: Optional[str] = None,
                  async_buffer: int = 0, async_capacity: int = 0,
@@ -99,7 +101,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         server_opt=server_opt, meta_mode=meta_mode, ctrl_lr=ctrl_lr,
         participation=participation, codec=codec,
         error_feedback=error_feedback, topk_ratio=topk_ratio,
-        cohort_strategy=strategy, lr_decay=0.992, fused_update=fused,
+        cohort_strategy=strategy, cohort_chunk=cohort_chunk,
+        lr_decay=0.992, fused_update=fused,
         engine=engine, async_buffer=async_buffer,
         async_capacity=async_capacity,
         async_max_staleness=async_max_staleness,
@@ -111,8 +114,25 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
                                     seed=seed)
+    round_kwargs = {}
+    if executor == "sharded":
+        # two-tier aggregation over every visible device: the cohort axis
+        # splits across the mesh data axis, each shard streams its clients
+        # through the chunked core, one psum reduces the partials
+        import jax
+        from repro.launch.mesh import make_auto_mesh
+        from repro.sharding.specs import cohort_grad_shardings
+        mesh = make_auto_mesh(mesh_model)
+        params_shape = jax.eval_shape(
+            model.init, jax.random.PRNGKey(seed))
+        round_kwargs["grad_shardings"] = cohort_grad_shardings(
+            params_shape, mesh, strategy)
+        print(f"[train] sharded executor on mesh "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    elif executor is not None:
+        round_kwargs["executor"] = executor
     trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
-                               seed=seed)
+                               seed=seed, **round_kwargs)
     if resume:
         extra = trainer.restore(resume)
         print(f"[train] resumed {resume} at round {trainer.round} "
@@ -170,6 +190,18 @@ def main():
                     help="cohort executor: client-parallel vmap, "
                          "client-sequential scan, or any registered "
                          "executor name")
+    ap.add_argument("--cohort-chunk", type=int, default=None,
+                    help="stream the cohort through the chunked executor "
+                         "in slices of this many clients — peak gradient "
+                         "memory is one chunk, results are bit-identical "
+                         "for every chunk size")
+    ap.add_argument("--executor", default=None,
+                    help="cohort-executor registry name; 'sharded' builds "
+                         "a (data, model) mesh over all visible devices "
+                         "and runs the two-tier shard_map aggregation")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis size of the --executor sharded mesh "
+                         "(the data axis takes the remaining devices)")
     ap.add_argument("--meta-mode", default="post",
                     choices=["post", "through_aggregation"],
                     help="FedMeta step: post-aggregation parameter step, or "
@@ -259,7 +291,9 @@ def main():
         meta_mode=args.meta_mode, ctrl_lr=args.ctrl_lr,
         participation=args.participation, codec=args.codec,
         error_feedback=args.error_feedback, topk_ratio=args.topk_ratio,
-        strategy=args.strategy, num_clients=args.num_clients,
+        strategy=args.strategy, cohort_chunk=args.cohort_chunk,
+        executor=args.executor, mesh_model=args.mesh_model,
+        num_clients=args.num_clients,
         log_every=args.log_every,
         examples=args.examples, iid=args.iid, seed=args.seed,
         ckpt_path=args.ckpt, resume=args.resume, fused=args.fused,

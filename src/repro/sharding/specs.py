@@ -154,6 +154,24 @@ def cohort_grad_shardings(params_shape: PyTree, mesh: Mesh,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def flat_group_pspecs(spec, mesh: Mesh) -> Tuple[P, ...]:
+    """One PartitionSpec per flat dtype-group buffer (``(rows, LANES)``
+    fp32, see :mod:`repro.core.flat`): rows shard over the model axis when
+    divisible, lanes stay whole (LANES=128 is the hardware lane tile).
+    The batch axes are deliberately NOT used — the cohort dimension was
+    already reduced away by the two-tier psum, and the row dimension is
+    the only thing left worth splitting."""
+    ax = "model" if "model" in mesh.axis_names else None
+    return tuple(P(_maybe(mesh, ax, g.rows), None) for g in spec.groups)
+
+
+def flat_group_shardings(spec, mesh: Mesh) -> Tuple[NamedSharding, ...]:
+    """:func:`flat_group_pspecs` as NamedShardings (jit in/out placement
+    for the aggregate buffers and optimizer-state slots)."""
+    return tuple(NamedSharding(mesh, p)
+                 for p in flat_group_pspecs(spec, mesh))
+
+
 def state_shardings(state_shape: PyTree, mesh: Mesh,
                     strategy: str = "vmap") -> PyTree:
     """Server state {params, opt, round}: opt moments mirror param specs."""
