@@ -171,7 +171,7 @@ def peak_memory_bytes(fn: Callable, *args, **kwargs) -> Dict[str, int]:
         # fallback: run once and count live device buffers (includes the
         # inputs/outputs themselves — coarser, but monotone in the same
         # blow-ups the gates guard against)
-        res = jax.block_until_ready(jax.jit(fn)(*args, **kwargs))
+        jax.block_until_ready(jax.jit(fn)(*args, **kwargs))
         live = 0
         for d in jax.live_arrays():
             live += d.nbytes

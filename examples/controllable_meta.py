@@ -12,13 +12,11 @@ import dataclasses
 import os
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 # benchmarks/ lives at the repo root (next to examples/), not under src/
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.common import evaluate, train_method  # noqa: E402
+from benchmarks.common import train_method  # noqa: E402
 from repro.configs import paper_models as pm
 from repro.data.partition import partition_by_writer
 from repro.data.pipeline import FederatedData

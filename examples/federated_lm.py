@@ -9,9 +9,6 @@ parameter llama-style learner (d_model 768, 12 layers) for a real run
     PYTHONPATH=src python examples/federated_lm.py [--rounds 200] [--hundred-m]
 """
 import argparse
-import dataclasses
-
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.launch.train import run_training

@@ -1,0 +1,9 @@
+"""Static-analysis tooling for the repo's own invariants.
+
+General-purpose linters cannot see this codebase's contracts — rng fold
+tags drawn from one registry, kernel/ref/ops triples with matching
+signatures, registry classes declaring their full capability surface, jit
+bodies free of host synchronization.  :mod:`repro.analysis.fedlint` checks
+exactly those, from the CLI (``python -m repro.analysis.fedlint src/``)
+and in CI.
+"""

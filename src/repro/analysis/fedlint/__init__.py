@@ -1,0 +1,36 @@
+"""fedlint — the repo-specific static analyzer.
+
+Four passes over the source tree (pure stdlib ``ast``, no jax import, no
+code execution):
+
+  ======  ==================================================================
+  FL001   file cannot be parsed
+  FL101   inline constant rng tag (belongs in repro.core.rngtags)
+  FL102   two constant rng tags share a value (stream collision)
+  FL103   rng key consumed twice without re-derivation
+  FL201   kernel ``*_pass`` without a matching ``ref.py`` oracle
+  FL202   kernel/oracle signature drift
+  FL203   kernel pass without a ``use_ref`` dispatch site in ``ops.py``
+  FL204   ``custom_vjp`` without a paired ``defvjp(fwd, bwd)``
+  FL301   registered class missing capability declarations /
+          ``register_algorithm`` without ``pseudo_gradient=``
+  FL302   ValueError guidance naming a nonexistent config field
+  FL401   host sync (``.item()`` / ``float()`` on tracer) in a traced body
+  FL402   host numpy call in a traced body
+  FL403   wall-clock read in a traced body
+  ======  ==================================================================
+
+CLI::
+
+    python -m repro.analysis.fedlint src/            # exit 1 on findings
+
+Per-line suppression::
+
+    key = jax.random.fold_in(k, 7)   # fedlint: disable=FL101
+
+API: :func:`run_fedlint` returns the findings programmatically.
+"""
+from repro.analysis.fedlint.core import (Finding, format_findings,
+                                         run_fedlint)
+
+__all__ = ["Finding", "run_fedlint", "format_findings"]

@@ -1,0 +1,30 @@
+"""``python -m repro.analysis.fedlint <paths...>`` — run all passes and
+exit 1 if anything is found (the CI ``analyze`` job's contract)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.fedlint.core import format_findings, run_fedlint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.fedlint",
+        description="repo-specific static analysis: rng-tag discipline, "
+                    "kernel/ref/ops contracts, registry capability "
+                    "surfaces, jit hygiene")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze (e.g. src/)")
+    args = ap.parse_args(argv)
+    findings = run_fedlint(args.paths)
+    if findings:
+        print(format_findings(findings))
+        print(f"fedlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("fedlint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,149 @@
+"""Pass 4 — jit hygiene (FL401-FL403).
+
+Host-side operations inside a traced body either fail at trace time deep
+in a round program, silently force a device sync (``.item()``, ``float()``
+on a tracer), or bake a trace-time constant where a per-call value was
+intended (``time.time()``, ``np.random``).  The pass flags, inside any
+function it can prove is traced:
+
+  * **FL401** — ``.item()`` calls, and ``float()`` / ``int()`` / ``bool()``
+    on a non-literal argument (tracer -> concretization error or sync);
+  * **FL402** — ``np.*`` / ``numpy.*`` calls (host numpy does not trace;
+    results freeze into the compiled program);
+  * **FL403** — ``time.time()`` / ``time.perf_counter()`` /
+    ``time.monotonic()`` (frozen at trace time — measures compilation, not
+    execution).
+
+"Traced" = decorated with ``jit`` / ``pjit`` / ``shard_map`` (directly or
+via ``functools.partial``), passed by name or lambda to ``jax.jit`` /
+``shard_map`` / ``lax.scan`` / ``lax.fori_loop`` / ``lax.while_loop`` /
+``lax.cond`` (optionally wrapped in ``jax.checkpoint`` / ``remat``), or
+nested inside such a function.  Anything the analysis cannot resolve
+(functions returned from builders and jitted elsewhere) is out of scope —
+the pass under-approximates rather than false-positives.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.fedlint.core import (Finding, ProjectIndex, SourceFile,
+                                         dotted_root, dotted_tail)
+
+_JIT_DECOS = frozenset({"jit", "pjit", "shard_map"})
+_TIME_FUNCS = frozenset({"time", "perf_counter", "monotonic",
+                         "process_time"})
+_WRAPPERS = frozenset({"checkpoint", "remat"})
+
+FuncNode = ast.AST     # FunctionDef | AsyncFunctionDef | Lambda
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    target = dec
+    if isinstance(dec, ast.Call):
+        target = dec.func
+        # functools.partial(jax.jit, ...) used as a decorator factory
+        if dotted_tail(target) == "partial" and dec.args \
+                and dotted_tail(dec.args[0]) in _JIT_DECOS:
+            return True
+    return dotted_tail(target) in _JIT_DECOS
+
+
+def _resolve_func_ref(node: ast.AST, defs: Dict[str, FuncNode]
+                      ) -> Optional[FuncNode]:
+    """A Name bound to a local def, a Lambda, or either wrapped in
+    jax.checkpoint/remat."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name):
+        return defs.get(node.id)
+    if isinstance(node, ast.Call) and dotted_tail(node.func) in _WRAPPERS \
+            and node.args:
+        return _resolve_func_ref(node.args[0], defs)
+    return None
+
+
+def _collect_defs(tree: ast.AST) -> Dict[str, FuncNode]:
+    """name -> def node, flat over the whole file (names are unique enough
+    in practice; a collision only risks a false negative)."""
+    defs: Dict[str, FuncNode] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Lambda):
+            defs[node.targets[0].id] = node.value
+    return defs
+
+
+def _traced_roots(sf: SourceFile) -> Set[FuncNode]:
+    defs = _collect_defs(sf.tree)
+    roots: Set[FuncNode] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                roots.add(node)
+        elif isinstance(node, ast.Call):
+            tail = dotted_tail(node.func)
+            cands: List[ast.AST] = []
+            if tail in ("jit", "pjit", "shard_map") and node.args:
+                cands = [node.args[0]]
+            elif tail == "scan" and node.args:
+                cands = [node.args[0]]
+            elif tail == "fori_loop" and len(node.args) >= 3:
+                cands = [node.args[2]]
+            elif tail == "while_loop" and len(node.args) >= 2:
+                cands = node.args[:2]
+            elif tail == "cond" and len(node.args) >= 3:
+                cands = node.args[1:3]
+            for c in cands:
+                fn = _resolve_func_ref(c, defs)
+                if fn is not None:
+                    roots.add(fn)
+    return roots
+
+
+def _flag_in_body(sf: SourceFile, fn: FuncNode,
+                  findings: List[Finding], seen: Set[int]) -> None:
+    for node in ast.walk(fn):
+        if id(node) in seen or not isinstance(node, ast.Call):
+            continue
+        seen.add(id(node))
+        tail = dotted_tail(node.func)
+        root = dotted_root(node.func) if isinstance(node.func,
+                                                    ast.Attribute) else None
+        if tail == "item" and isinstance(node.func, ast.Attribute):
+            findings.append(Finding(
+                sf.path, node.lineno, "FL401",
+                ".item() inside a traced body forces a device sync (or a "
+                "tracer concretization error); keep values on device or "
+                "move the read outside jit"))
+        elif isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int", "bool") \
+                and node.args and not isinstance(node.args[0], ast.Constant):
+            findings.append(Finding(
+                sf.path, node.lineno, "FL401",
+                f"{node.func.id}() on a non-literal inside a traced body "
+                "concretizes a tracer; use jnp casts "
+                "(x.astype/jnp.float32) instead"))
+        elif root in ("np", "numpy"):
+            findings.append(Finding(
+                sf.path, node.lineno, "FL402",
+                f"host numpy call {ast.unparse(node.func)}() inside a "
+                "traced body freezes its result at trace time; use jnp"))
+        elif root == "time" and tail in _TIME_FUNCS:
+            findings.append(Finding(
+                sf.path, node.lineno, "FL403",
+                f"time.{tail}() inside a traced body is evaluated ONCE at "
+                "trace time — it measures compilation, not execution; "
+                "time on the host around the jitted call"))
+
+
+def check(index: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in index.files:
+        seen: Set[int] = set()
+        for root_fn in _traced_roots(sf):
+            _flag_in_body(sf, root_fn, findings, seen)
+    return findings

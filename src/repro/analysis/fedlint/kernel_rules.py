@@ -1,0 +1,188 @@
+"""Pass 2 — kernel contracts (FL201-FL204).
+
+Every Pallas kernel in this repo ships as a triple: ``kernel.py`` (the
+device code), ``ref.py`` (a pure-jnp oracle the tests and the debug
+``use_ref`` path run), ``ops.py`` (the dispatch layer, often wrapping the
+pair in a ``jax.custom_vjp``).  The contract a human reviewer checks by
+hand — and forgets to — is mechanical:
+
+  * **FL201** — every public ``*_pass`` / ``*_pass_bwd`` in
+    ``kernels/<name>/kernel.py`` has the matching oracle in the sibling
+    ``ref.py`` (``foo_pass`` -> ``foo_ref``, ``foo_pass_bwd`` ->
+    ``foo_bwd_ref``).
+  * **FL202** — kernel and oracle have the SAME signature: identical
+    positional parameters, identical keyword-only parameters after
+    dropping the kernel-side tuning knobs ``block_rows`` / ``interpret``
+    (oracles have no tiling).  Signature drift means the ``use_ref`` arm
+    silently computes something else.
+  * **FL203** — every public ``*_pass`` is referenced in the sibling
+    ``ops.py`` from inside a function whose enclosing scope takes a
+    ``use_ref`` parameter — i.e. a real kernel/oracle dispatch site
+    exists, not just an unconditional kernel call.
+  * **FL204** — a ``@jax.custom_vjp`` function must pair with a
+    ``f.defvjp(fwd, bwd)`` call (both arguments) in its defining scope;
+    a missing defvjp surfaces only at trace time, deep inside a round.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.fedlint.core import (Finding, ProjectIndex, SourceFile,
+                                         dotted_tail)
+
+_KERNEL_KNOBS = frozenset({"block_rows", "interpret"})
+
+
+def _oracle_name(pass_name: str) -> str:
+    if pass_name.endswith("_pass_bwd"):
+        return pass_name[:-len("_pass_bwd")] + "_bwd_ref"
+    assert pass_name.endswith("_pass"), pass_name
+    return pass_name[:-len("_pass")] + "_ref"
+
+
+def _public_passes(sf: SourceFile) -> List[ast.FunctionDef]:
+    return [n for n in sf.tree.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("_")
+            and (n.name.endswith("_pass") or n.name.endswith("_pass_bwd"))]
+
+
+def _top_level_funcs(sf: SourceFile) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in sf.tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _signature(fn: ast.FunctionDef, *, drop_knobs: bool
+               ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    pos = tuple(a.arg for a in fn.args.posonlyargs + fn.args.args)
+    kw = tuple(sorted(a.arg for a in fn.args.kwonlyargs
+                      if not (drop_knobs and a.arg in _KERNEL_KNOBS)))
+    return pos, kw
+
+
+def _kernel_triples(index: ProjectIndex
+                    ) -> List[Tuple[SourceFile, Optional[SourceFile],
+                                    Optional[SourceFile]]]:
+    by_dir: Dict[str, Dict[str, SourceFile]] = {}
+    for sf in index.files:
+        d, base = os.path.split(sf.path)
+        if base in ("kernel.py", "ref.py", "ops.py") \
+                and "/kernels/" in sf.posix + "/":
+            by_dir.setdefault(d, {})[base] = sf
+    return [(m["kernel.py"], m.get("ref.py"), m.get("ops.py"))
+            for m in by_dir.values() if "kernel.py" in m]
+
+
+def _use_ref_dispatch_names(ops: SourceFile) -> Set[str]:
+    """Names referenced (as Name or Attribute tail) inside a function whose
+    enclosing def chain includes a ``use_ref`` parameter."""
+    names: Set[str] = set()
+
+    def visit(node: ast.AST, in_dispatch: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            args = node.args
+            params = {a.arg for a in (args.posonlyargs + args.args
+                                      + args.kwonlyargs)}
+            in_dispatch = in_dispatch or "use_ref" in params
+        if in_dispatch:
+            if isinstance(node, ast.Name):
+                names.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                names.add(node.attr)
+        for child in ast.iter_child_nodes(node):
+            visit(child, in_dispatch)
+
+    visit(ops.tree, False)
+    return names
+
+
+def _check_custom_vjp(sf: SourceFile, findings: List[Finding]) -> None:
+    """FL204 within one file: pair every custom_vjp def with a 2-arg
+    defvjp call in its defining scope (module body or the enclosing
+    function's subtree)."""
+
+    def scope_check(owner_body: List[ast.stmt], scope: ast.AST) -> None:
+        decorated: List[ast.FunctionDef] = []
+        for stmt in owner_body:
+            if isinstance(stmt, ast.FunctionDef):
+                for dec in stmt.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    if dotted_tail(target) == "custom_vjp":
+                        decorated.append(stmt)
+        if not decorated:
+            return
+        defvjp_ok: Set[str] = set()
+        defvjp_partial: Dict[str, int] = {}
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "defvjp" \
+                    and isinstance(node.func.value, ast.Name):
+                if len(node.args) >= 2:
+                    defvjp_ok.add(node.func.value.id)
+                else:
+                    defvjp_partial[node.func.value.id] = node.lineno
+        for fn in decorated:
+            if fn.name in defvjp_ok:
+                continue
+            if fn.name in defvjp_partial:
+                findings.append(Finding(
+                    sf.path, defvjp_partial[fn.name], "FL204",
+                    f"{fn.name}.defvjp needs BOTH fwd and bwd rules"))
+            else:
+                findings.append(Finding(
+                    sf.path, fn.lineno, "FL204",
+                    f"custom_vjp function {fn.name!r} has no "
+                    f"{fn.name}.defvjp(fwd, bwd) call in its defining "
+                    "scope; differentiating it will fail at trace time"))
+
+    scope_check(sf.tree.body, sf.tree)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef):
+            scope_check(node.body, node)
+
+
+def check(index: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for kernel, ref, ops in _kernel_triples(index):
+        passes = _public_passes(kernel)
+        if not passes:
+            continue
+        ref_funcs = _top_level_funcs(ref) if ref else {}
+        dispatch_names = _use_ref_dispatch_names(ops) if ops else set()
+        for fn in passes:
+            oracle = _oracle_name(fn.name)
+            rfn = ref_funcs.get(oracle)
+            if rfn is None:
+                where = ref.path if ref else os.path.join(
+                    os.path.dirname(kernel.path), "ref.py")
+                findings.append(Finding(
+                    kernel.path, fn.lineno, "FL201",
+                    f"kernel pass {fn.name!r} has no oracle {oracle!r} in "
+                    f"{where}; every *_pass needs a same-signature pure-"
+                    "jnp reference"))
+            else:
+                kpos, kkw = _signature(fn, drop_knobs=True)
+                rpos, rkw = _signature(rfn, drop_knobs=False)
+                if (kpos, kkw) != (rpos, rkw):
+                    findings.append(Finding(
+                        kernel.path, fn.lineno, "FL202",
+                        f"signature drift between {fn.name} and {oracle}: "
+                        f"kernel ({', '.join(kpos)} * {', '.join(kkw)}) vs "
+                        f"oracle ({', '.join(rpos)} * {', '.join(rkw)}) "
+                        "(positional must match exactly; kw-only compared "
+                        "after dropping block_rows/interpret)"))
+            if fn.name not in dispatch_names:
+                where = ops.path if ops else os.path.join(
+                    os.path.dirname(kernel.path), "ops.py")
+                findings.append(Finding(
+                    kernel.path, fn.lineno, "FL203",
+                    f"kernel pass {fn.name!r} has no use_ref dispatch site "
+                    f"in {where}: it must be called from a function whose "
+                    "scope takes use_ref, so tests can swap in the oracle"))
+    for sf in index.files:
+        _check_custom_vjp(sf, findings)
+    return findings

@@ -1,0 +1,271 @@
+"""Pass 1 — RNG discipline (FL101-FL103).
+
+The reproducibility claims rest on constant fold tags drawn from ONE
+registry (:mod:`repro.core.rngtags`): every stream separates from its
+siblings by folding a dedicated constant, and two streams folding the same
+constant out of the same key ARE the same stream.  The rules:
+
+  * **FL101** — a constant rng tag written inline: ``jax.random.fold_in(k,
+    0x1234)`` or ``fold_in(k, LOCAL_CONST)`` where the name is a
+    module-level int of the same file instead of an import from
+    ``repro.core.rngtags``; likewise literal int components of
+    ``np.random.default_rng((seed, 7777, ...))`` seed tuples.  Dynamic
+    tags (loop indices, parameters, arithmetic on registry names) are the
+    sanctioned pattern and never flagged.  ``core/rngtags.py`` itself is
+    exempt — it is the registry.
+  * **FL102** — two constant tags share a value (registry names and/or
+    inline constants): the silent stream collision the registry exists to
+    prevent.
+  * **FL103** — the same key variable is consumed twice by ``jax.random``
+    draws in one straight-line statement list without being re-derived
+    (``split`` / ``fold_in`` rebinding) in between — the classic reused-key
+    bug.  Branches of an ``if`` are separate lists, so alternative draws
+    from one key never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.fedlint.core import (Finding, ProjectIndex, SourceFile,
+                                         dotted_root, dotted_tail)
+
+# jax.random functions that CONSUME a key passed as first argument.
+# fold_in / PRNGKey / key derivation are intentionally absent: deriving two
+# different streams from one key via distinct tags is the sanctioned use.
+_CONSUMING = frozenset({
+    "bernoulli", "uniform", "normal", "randint", "exponential", "gamma",
+    "beta", "laplace", "truncated_normal", "choice", "categorical",
+    "permutation", "split", "bits", "gumbel", "poisson", "rademacher",
+})
+
+
+def _module_int_consts(sf: SourceFile) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in sf.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, int)
+                and not isinstance(node.value.value, bool)):
+            out[node.targets[0].id] = node.value.value
+    return out
+
+
+def _rngtags_imports(sf: SourceFile) -> Tuple[Set[str], Set[str]]:
+    """(names imported FROM the registry, aliases OF the registry module)."""
+    names: Set[str] = set()
+    modules: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module.endswith("rngtags"):
+                names.update(a.asname or a.name for a in node.names)
+            elif node.module.endswith("repro.core"):
+                for a in node.names:
+                    if a.name == "rngtags":
+                        modules.add(a.asname or "rngtags")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.endswith("rngtags"):
+                    modules.add(a.asname or a.name.split(".")[-1])
+    return names, modules
+
+
+def _tag_ok(tag: ast.AST, reg_names: Set[str], reg_mods: Set[str],
+            local_consts: Dict[str, int]) -> Optional[str]:
+    """None if the tag expression is acceptable; else a reason string."""
+    if isinstance(tag, ast.Constant) and isinstance(tag.value, int) \
+            and not isinstance(tag.value, bool):
+        return (f"inline constant rng tag {tag.value:#x}; declare it in "
+                "repro.core.rngtags and import it")
+    if isinstance(tag, ast.Name):
+        if tag.id in reg_names:
+            return None
+        if tag.id in local_consts:
+            return (f"constant rng tag {tag.id} is defined locally; move "
+                    "it to repro.core.rngtags (the tag registry) and "
+                    "import it")
+        return None                       # dynamic (param, loop index, ...)
+    if isinstance(tag, ast.Attribute):
+        root = dotted_root(tag)
+        if root in reg_mods:
+            return None
+        return None                       # attribute of something else: dynamic
+    # BinOp etc: acceptable iff no raw int literal participates at top level
+    if isinstance(tag, ast.BinOp):
+        for side in (tag.left, tag.right):
+            reason = _tag_ok(side, reg_names, reg_mods, local_consts)
+            if reason is not None:
+                return reason
+    return None
+
+
+def _check_file_tags(sf: SourceFile,
+                     inline_tags: List[Tuple[int, str, SourceFile, int]]
+                     ) -> List[Finding]:
+    findings: List[Finding] = []
+    if sf.posix.endswith("core/rngtags.py"):
+        return findings                   # the registry itself
+    reg_names, reg_mods = _rngtags_imports(sf)
+    local_consts = _module_int_consts(sf)
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = dotted_tail(node.func)
+        if tail == "fold_in" and len(node.args) >= 2:
+            tag = node.args[1]
+            reason = _tag_ok(tag, reg_names, reg_mods, local_consts)
+            if reason is not None:
+                findings.append(Finding(sf.path, tag.lineno, "FL101",
+                                        reason + " (fold_in tag)"))
+            if isinstance(tag, ast.Constant) and isinstance(tag.value, int):
+                inline_tags.append((tag.value, f"inline fold_in tag", sf,
+                                    tag.lineno))
+            elif isinstance(tag, ast.Name) and tag.id in local_consts:
+                inline_tags.append((local_consts[tag.id],
+                                    f"local constant {tag.id}", sf,
+                                    tag.lineno))
+        elif tail == "default_rng" and node.args:
+            seed = node.args[0]
+            if isinstance(seed, ast.Tuple):
+                for el in seed.elts:
+                    if isinstance(el, ast.Constant) \
+                            and isinstance(el.value, int) \
+                            and not isinstance(el.value, bool):
+                        findings.append(Finding(
+                            sf.path, el.lineno, "FL101",
+                            f"inline constant seed-tuple component "
+                            f"{el.value}; host rng streams separate via "
+                            "constants from repro.core.rngtags too"))
+                        inline_tags.append((el.value,
+                                            "inline seed-tuple component",
+                                            sf, el.lineno))
+                    elif isinstance(el, ast.Name) and el.id in local_consts \
+                            and el.id not in reg_names:
+                        findings.append(Finding(
+                            sf.path, el.lineno, "FL101",
+                            f"constant seed-tuple component {el.id} is "
+                            "defined locally; move it to "
+                            "repro.core.rngtags and import it"))
+                        inline_tags.append((local_consts[el.id],
+                                            f"local constant {el.id}", sf,
+                                            el.lineno))
+    return findings
+
+
+def _check_duplicates(index: ProjectIndex,
+                      inline_tags: List[Tuple[int, str, SourceFile, int]]
+                      ) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Dict[int, str] = {}
+    for name, (value, sf, line) in sorted(index.rng_tags.items(),
+                                          key=lambda kv: kv[1][2]):
+        if value in seen:
+            findings.append(Finding(
+                sf.path, line, "FL102",
+                f"rng tag {name} = {value:#x} collides with {seen[value]}; "
+                "two streams folding the same constant out of one key are "
+                "the SAME stream"))
+        else:
+            seen[value] = name
+    for value, desc, sf, line in inline_tags:
+        if value in seen:
+            findings.append(Finding(
+                sf.path, line, "FL102",
+                f"{desc} = {value:#x} collides with registry tag "
+                f"{seen[value]}"))
+        else:
+            seen[value] = f"{desc} ({sf.path}:{line})"
+    return findings
+
+
+def _consuming_uses(stmt: ast.stmt) -> List[Tuple[str, int]]:
+    """(key name, line) for each jax.random draw whose key is a plain Name
+    — in THIS statement's own expressions only: nested statement lists
+    (loop/if bodies) are analyzed as independent straight-line scopes by
+    the caller, and nested function/lambda bodies execute later."""
+    out: List[Tuple[str, int]] = []
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if isinstance(node, ast.stmt) and node is not stmt:
+            return
+        if isinstance(node, ast.Call):
+            tail = dotted_tail(node.func)
+            if tail in _CONSUMING and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                root = dotted_root(node.func)
+                # require a jax.random-ish chain or bare import: 'random'
+                # in the chain or a bare name imported from jax.random
+                chain_ok = isinstance(node.func, ast.Name) or root in (
+                    "jax", "jrandom", "jr", "random")
+                if chain_ok:
+                    out.append((node.args[0].id, node.lineno))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(stmt)
+    return out
+
+
+def _bound_names(stmt: ast.stmt) -> Set[str]:
+    names: Set[str] = set()
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    else:
+        targets = []
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name):
+                names.add(node.id)
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.NamedExpr) and isinstance(node.target,
+                                                          ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+def _check_reuse_in_list(sf: SourceFile, body: List[ast.stmt],
+                         findings: List[Finding]) -> None:
+    used: Dict[str, int] = {}
+    for stmt in body:
+        for name, line in _consuming_uses(stmt):
+            if name in used:
+                findings.append(Finding(
+                    sf.path, line, "FL103",
+                    f"rng key {name!r} already consumed by a jax.random "
+                    f"draw on line {used[name]}; re-derive with split/"
+                    "fold_in before drawing again (reused keys correlate "
+                    "streams)"))
+            else:
+                used[name] = line
+        for name in _bound_names(stmt):
+            used.pop(name, None)
+        # recurse into nested statement lists as INDEPENDENT straight-line
+        # scopes (if/else arms may legitimately draw from the same key)
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if isinstance(sub, list) and sub \
+                    and isinstance(sub[0], ast.stmt):
+                _check_reuse_in_list(sf, sub, findings)
+        for handler in getattr(stmt, "handlers", []):
+            _check_reuse_in_list(sf, handler.body, findings)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pass                           # already covered above via body
+
+
+def check(index: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    inline_tags: List[Tuple[int, str, SourceFile, int]] = []
+    for sf in index.files:
+        findings.extend(_check_file_tags(sf, inline_tags))
+        _check_reuse_in_list(sf, sf.tree.body, findings)
+    findings.extend(_check_duplicates(index, inline_tags))
+    return findings

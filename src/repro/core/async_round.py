@@ -57,6 +57,7 @@ from repro.core.executors import FlatAggregate, get_executor
 from repro.core.flat import LANES, FlatSpec, make_flat_spec, zeros_flat
 from repro.core.meta import meta_update
 from repro.core.round import participation_mask, resolve_server_lr
+from repro.core.sanitize import check_flat_groups
 from repro.kernels.fused_update.ops import flat_accumulate
 from repro.models.model import Model
 from repro.sim.faults import fault_streams, resolve_faults
@@ -109,7 +110,8 @@ def init_async_state(fed, spec: FlatSpec) -> PyTree:
 
 def make_async_tick(model: Model, fed, *, algorithm: Optional[str] = None,
                     executor: Optional[str] = None,
-                    engine: Optional[str] = None, spmd_axis_name=None):
+                    engine: Optional[str] = None, spmd_axis_name=None,
+                    sanitize: bool = False):
     """Build ``one_tick(state, cohort_batch, meta_batch, client_weights,
     rng) -> (state, metrics)`` — same signature as the synchronous
     ``one_round``, so ``rounds_per_call`` chunking, the trainer and the
@@ -205,6 +207,13 @@ def make_async_tick(model: Model, fed, *, algorithm: Optional[str] = None,
             # decode, BEFORE pooling (ungarbled multipliers are exactly
             # 1.0, an IEEE no-op)
             g_groups = [g * fs.garble_mult[:, None, None] for g in g_groups]
+        if sanitize:
+            # probe the decoded (and possibly garbled) payloads BEFORE they
+            # enter the pool: a NaN caught here names the uplink, not a
+            # server step several flushes later
+            check_flat_groups(spec, g_groups,
+                              "decoded client deltas before pool insert "
+                              "(async tick)")
 
         # ---- pool insert (evict-stalest on overflow) --------------------
         v_now = a["server_version"]

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.rngtags import EVAL_FOLD
+
 PyTree = Any
 # loss_fn(params, batch, rng) -> (scalar_loss, metrics)
 LossFn = Callable[..., Tuple[jax.Array, Any]]
@@ -109,7 +111,7 @@ def uga_update(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr, rng=None, *,
     Returns (g_k, eval_loss)."""
     n_kt = local_steps * local_epochs - 1          # keep-trace steps
     mbs = _split_microbatches(batch, local_steps)
-    eval_rng = jax.random.fold_in(rng, 10_000) if rng is not None else None
+    eval_rng = jax.random.fold_in(rng, EVAL_FOLD) if rng is not None else None
 
     def local_loss(w, mb, i):
         step_rng = jax.random.fold_in(rng, i) if rng is not None else None
@@ -173,7 +175,8 @@ def uga_update_autodiff(loss_fn: LossFn, w_t: PyTree, batch: PyTree, lr,
                              n_steps=n_kt)
         else:
             w_k = w0
-        eval_rng = jax.random.fold_in(rng, 10_000) if rng is not None else None
+        eval_rng = (jax.random.fold_in(rng, EVAL_FOLD)
+                    if rng is not None else None)
         l, _ = loss_fn(w_k, batch, eval_rng)       # gradient evaluation
         return l
 

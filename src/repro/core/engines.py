@@ -66,6 +66,10 @@ class ServerEngine:
     # decode into flat dtype-group buffers (repro.comm), so only engines
     # consuming flat handles can declare "lossy"
     codec_capabilities: frozenset = frozenset({"none"})
+    # True routes the round builder through the async tick program
+    # (repro.core.async_round) instead of the synchronous barrier round —
+    # part of the declared capability surface (fedlint FL301)
+    is_async: bool = False
 
     def init_state(self, params: PyTree) -> PyTree:
         raise NotImplementedError

@@ -1,0 +1,113 @@
+"""Central registry of every constant rng fold tag in the repo.
+
+Every headline reproducibility claim — participation streams invariant to
+``rounds_per_call`` chunking, fault streams bit-reproducible under the run
+seed, chunk-size-invariant aggregation — rests on the *same* derivation
+discipline: a stream is separated from its siblings by folding a dedicated
+constant out of a parent key (``jax.random.fold_in``).  Two streams folding
+the SAME constant out of the same key are the same stream, which is exactly
+the silent per-client weighting bias FedAgg (arXiv:2303.15799) shows
+compounds across rounds.  This module is the single place those constants
+live, so the collision is structurally impossible:
+
+  * tags are declared once, here, and imported everywhere they are used
+    (the ``fedlint`` static analyzer rejects inline constant tags — rule
+    FL101 — and duplicate registry values — FL102);
+  * :data:`TAGS` + the import-time uniqueness check below (and the
+    ``tests/test_rngtags.py`` unit test) keep the registry collision-free;
+  * the historical stream values are pinned bit-exact by a regression test,
+    so centralizing the constants can never silently reseed a run.
+
+Key lineage (who folds what out of what):
+
+    run key (PRNGKey(seed))
+      └─ round key  = fold_in(run_key, ROUND_OFFSET + round_idx)   [trainer]
+           ├─ split -> (client key, meta key)                      [round]
+           ├─ fold_in(round key, PARTICIPATION_FOLD)               [round]
+           └─ fold_in(round key, FAULT_FOLD)                       [faults]
+    client key (one row of split(client key, cohort))
+      ├─ fold_in(client key, i)  for local step i < EVAL_FOLD      [client]
+      └─ fold_in(client key, EVAL_FOLD)   gradient evaluation      [client]
+
+Host-side numpy streams seed ``np.random.default_rng`` with tuples; their
+dedicated components live here too (``META_SAMPLE_SEED``, ``SPEED_SEED``).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["PARTICIPATION_FOLD", "FAULT_FOLD", "EVAL_FOLD", "ROUND_OFFSET",
+           "META_SAMPLE_SEED", "SPEED_SEED", "TAGS", "round_key"]
+
+# ---------------------------------------------------------------------------
+# device-side fold tags (jax.random.fold_in off a jax PRNG key)
+# ---------------------------------------------------------------------------
+# participation mask: folded off the ROUND key, separate from the
+# client/meta split so participation=1 keeps historical streams bit-exact
+# (repro.core.round.participation_mask)
+PARTICIPATION_FOLD = 0x5712A661
+
+# client fault streams: folded off the ROUND key, separate from the
+# participation fold and the client/meta split (repro.sim.faults)
+FAULT_FOLD = 0x00FA0175
+
+# gradient-evaluation rng of a client local update: folded off the CLIENT
+# key, above any reachable local step index i (steps fold their loop index
+# directly, so EVAL_FOLD doubles as the step-count ceiling)
+# (repro.core.client)
+EVAL_FOLD = 10_000
+
+# per-round key derivation off the RUN key: round r uses
+# fold_in(run_key, ROUND_OFFSET + r) — see :func:`round_key`
+# (repro.core.trainer)
+ROUND_OFFSET = 0
+
+# ---------------------------------------------------------------------------
+# host-side numpy seed-tuple components (np.random.default_rng((seed, TAG,
+# ...)) — a dedicated component separates a host stream from its siblings)
+# ---------------------------------------------------------------------------
+# D_meta sampling stream: (seed, META_SAMPLE_SEED, round_idx), vs the
+# cohort sampling stream's (seed, round_idx) (repro.data.pipeline)
+META_SAMPLE_SEED = 7_777
+
+# persistent heavy-tail client speeds: (seed, SPEED_SEED)
+# (repro.sim.faults.heavy_tail_speeds)
+SPEED_SEED = 0x5BEED
+
+# ---------------------------------------------------------------------------
+# registry + uniqueness
+# ---------------------------------------------------------------------------
+TAGS = {
+    "PARTICIPATION_FOLD": PARTICIPATION_FOLD,
+    "FAULT_FOLD": FAULT_FOLD,
+    "EVAL_FOLD": EVAL_FOLD,
+    "ROUND_OFFSET": ROUND_OFFSET,
+    "META_SAMPLE_SEED": META_SAMPLE_SEED,
+    "SPEED_SEED": SPEED_SEED,
+}
+
+
+def _check_unique() -> None:
+    seen = {}
+    for name, value in TAGS.items():
+        if value in seen:
+            raise ValueError(
+                f"rng tag collision: {name} and {seen[value]} both use "
+                f"{value:#x} — two streams folding the same constant out "
+                "of the same key are the SAME stream (silent correlation "
+                "bias); pick a fresh constant")
+        seen[value] = name
+
+
+_check_unique()
+
+
+def round_key(key: jax.Array, round_idx) -> jax.Array:
+    """The per-round key of round ``round_idx`` under run key ``key``.
+
+    Every per-round stream — the client/meta split, the participation
+    mask's fold, the fault streams' fold — derives from this one key, so
+    the streams are invariant to how rounds are batched
+    (``rounds_per_call`` chunking, async ticks, host-side retry
+    recomputation)."""
+    return jax.random.fold_in(key, ROUND_OFFSET + round_idx)

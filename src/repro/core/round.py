@@ -58,8 +58,11 @@ from repro.configs.base import FedConfig
 from repro.core.algorithms import get_algorithm
 from repro.core.engines import resolve_engine, tree_global_norm
 from repro.core.executors import resolve_executor
-from repro.core.flat import make_flat_spec
+from repro.core.flat import flatten_tree, make_flat_spec
 from repro.core.meta import meta_update, meta_update_through_cohort
+from repro.core.rngtags import PARTICIPATION_FOLD
+from repro.core.sanitize import (check_flat_groups, checkify_round,
+                                 throw_if_error)
 from repro.models.model import Model
 from repro.sim.faults import client_failed_mask, fault_streams, resolve_faults
 
@@ -122,7 +125,7 @@ def participation_mask(rng: jax.Array, cohort: int, rate: float) -> jax.Array:
     ``stepped = sum(weights) > 0`` and leaves params/opt/ctrl bit-unchanged
     for that round — the old silent fall-back to full participation
     over-trained exactly when the fleet was at its flakiest."""
-    keep = jax.random.bernoulli(jax.random.fold_in(rng, 0x5712A661),
+    keep = jax.random.bernoulli(jax.random.fold_in(rng, PARTICIPATION_FOLD),
                                 p=rate, shape=(cohort,))
     return keep.astype(jnp.float32)
 
@@ -132,7 +135,8 @@ def make_federated_round(model: Model, fed: FedConfig, *,
                          rounds_per_call: int = 1,
                          algorithm: Optional[str] = None,
                          executor: Optional[str] = None,
-                         engine: Optional[str] = None):
+                         engine: Optional[str] = None,
+                         sanitize: bool = False):
     """Compose (algorithm, executor, engine) into one round program.
 
     ``spmd_axis_name``: mesh axes the cohort dimension is sharded over
@@ -143,7 +147,12 @@ def make_federated_round(model: Model, fed: FedConfig, *,
     GSPMD never all-gathers the stack.  ``rounds_per_call``: scan K rounds
     into one program.  ``algorithm`` / ``executor`` / ``engine``: registry
     names overriding the ``fed``-derived defaults (``fed.algorithm``,
-    ``fed.cohort_strategy`` + shardings, ``fed.fused_update``)."""
+    ``fed.cohort_strategy`` + shardings, ``fed.fused_update``).
+    ``sanitize``: plant :func:`repro.core.sanitize.check_flat_groups`
+    probes on the post-round flat parameter buffers (and, async, on the
+    decoded per-client deltas); inert unless the round program is
+    transformed by :func:`repro.core.sanitize.checkify_round` — which
+    :class:`RoundFnCache` does when built with ``sanitize=True``."""
     eng_probe = resolve_engine(fed, engine=engine)
     if getattr(eng_probe, "is_async", False):
         # Asynchronous engines replace the whole round SHAPE, not just the
@@ -159,7 +168,8 @@ def make_federated_round(model: Model, fed: FedConfig, *,
         return _chunk_rounds(
             make_async_tick(model, fed, algorithm=algorithm,
                             executor=executor, engine=engine,
-                            spmd_axis_name=spmd_axis_name),
+                            spmd_axis_name=spmd_axis_name,
+                            sanitize=sanitize),
             rounds_per_call)
 
     faults = resolve_faults(fed)
@@ -361,6 +371,11 @@ def make_federated_round(model: Model, fed: FedConfig, *,
             for mk in ("client_loss", "grad_norm", "meta_loss"):
                 if mk in metrics:
                     metrics[mk] = jnp.where(stepped, metrics[mk], 0.0)
+        if sanitize:
+            spec = make_flat_spec(params)
+            check_flat_groups(
+                spec, flatten_tree(spec, new_state["params"]),
+                "post-round server params (sync round)")
         return new_state, metrics
 
     return _chunk_rounds(one_round, rounds_per_call)
@@ -390,20 +405,40 @@ def _chunk_rounds(one_round, rounds_per_call: int):
 class RoundFnCache:
     """Jitted round programs keyed by chunk size, for drivers that mix
     full ``rounds_per_call`` chunks with a tail remainder — every driver
-    shares this cache instead of re-implementing the per-k jit dict."""
+    shares this cache instead of re-implementing the per-k jit dict.
+
+    ``sanitize=True`` jits each program under
+    :func:`repro.core.sanitize.checkify_round` and raises the checkified
+    error host-side after every call, so a NaN
+    fires the round it appears with the planted probes' message instead of
+    poisoning later rounds silently."""
 
     def __init__(self, model: Model, fed: FedConfig, *, donate: bool = True,
-                 **round_kwargs):
+                 sanitize: bool = False, **round_kwargs):
         self._make = lambda k: make_federated_round(
-            model, fed, rounds_per_call=k, **round_kwargs)
+            model, fed, rounds_per_call=k, sanitize=sanitize,
+            **round_kwargs)
         self._donate = donate
+        self._sanitize = sanitize
         self._fns: Dict[int, Any] = {}
 
     def __call__(self, k: int):
         if k not in self._fns:
-            self._fns[k] = jax.jit(
-                self._make(k),
-                donate_argnums=(0,) if self._donate else ())
+            donate = (0,) if self._donate else ()
+            if self._sanitize:
+                # checkify_round keeps the positional signature (the error
+                # value is an extra OUTPUT), so state stays argnum 0
+                jitted = jax.jit(checkify_round(self._make(k)),
+                                 donate_argnums=donate)
+
+                def checked(*args, _fn=jitted):
+                    err, out = _fn(*args)
+                    throw_if_error(err)
+                    return out
+
+                self._fns[k] = checked
+            else:
+                self._fns[k] = jax.jit(self._make(k), donate_argnums=donate)
         return self._fns[k]
 
 

@@ -39,6 +39,7 @@ import numpy as np
 from repro.checkpoint import restore as ckpt_restore
 from repro.checkpoint import save as ckpt_save
 from repro.configs.base import FedConfig
+from repro.core.rngtags import round_key
 from repro.core.round import (RoundFnCache, init_server_state,
                               stack_round_inputs)
 from repro.data.pipeline import FederatedData
@@ -56,14 +57,15 @@ class FederatedTrainer:
     def __init__(self, model: Model, fed: FedConfig, *,
                  rounds_per_call: int = 1, donate: bool = True,
                  seed: int = 0, key: Optional[jax.Array] = None,
-                 engine: Optional[str] = None, **round_kwargs):
+                 engine: Optional[str] = None, sanitize: bool = False,
+                 **round_kwargs):
         self.model = model
         self.fed = fed
         self.rounds_per_call = max(int(rounds_per_call), 1)
         if engine is not None:
             round_kwargs["engine"] = engine
         self._cache = RoundFnCache(model, fed, donate=donate,
-                                   **round_kwargs)
+                                   sanitize=sanitize, **round_kwargs)
         self.key = key if key is not None else jax.random.PRNGKey(seed)
         self.state = init_server_state(model, fed, self.key, engine=engine)
         self.history: List[Dict[str, float]] = []
@@ -123,7 +125,7 @@ class FederatedTrainer:
             metas = [self._sample_meta(sample_meta, data, r + j, meta_batch,
                                        samples[j])
                      for j in range(k)]
-            rngs = [jax.random.fold_in(self.key, r + j) for j in range(k)]
+            rngs = [round_key(self.key, r + j) for j in range(k)]
             metrics = self._dispatch(samples, metas, rngs)
 
             # THE record assembly — every driver shares this one.  Vector

@@ -11,9 +11,11 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.core.rngtags import META_SAMPLE_SEED
 
 
 @dataclasses.dataclass
@@ -106,7 +108,7 @@ class FederatedData:
 
     def sample_meta(self, round_idx: int, batch: int) -> Dict[str, np.ndarray]:
         assert self.meta_indices is not None, "no meta set configured"
-        rng = np.random.default_rng((self.seed, 7_777, round_idx))
+        rng = np.random.default_rng((self.seed, META_SAMPLE_SEED, round_idx))
         take = rng.choice(self.meta_indices, size=batch,
                           replace=self.meta_indices.size < batch)
         return self._gather(take)

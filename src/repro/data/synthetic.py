@@ -16,7 +16,6 @@ convergence-speed ratios) are testable:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -149,9 +149,7 @@ def _upd_vjp(opt: str, momentum: float, b1: float, b2: float, eps: float,
     @jax.custom_vjp
     def upd(G, p, m, v, scalars):
         if use_ref:
-            return R.update_ref(G, p, m, v, scale=scalars[0, 0],
-                                lr=scalars[0, 1], bc1=scalars[0, 2],
-                                bc2=scalars[0, 3], **hp)
+            return R.update_ref(G, p, m, v, scalars, **hp)
         return K.update_pass(G, p, m, v, scalars, interpret=interpret, **hp)
 
     def fwd(G, p, m, v, scalars):

@@ -51,11 +51,16 @@ def accumulate_bwd_ref(g: jax.Array, w, d_out: jax.Array
 
 
 def update_ref(G: jax.Array, p: jax.Array, m: Optional[jax.Array],
-               v: Optional[jax.Array], *, opt: str, scale, lr,
+               v: Optional[jax.Array], scalars: jax.Array, *, opt: str,
                momentum: float = 0.9, b1: float = 0.9, b2: float = 0.99,
-               eps: float = 1e-8, bc1=1.0, bc2=1.0):
-    """One flat-buffer optimizer step.  Returns (new_p, new_m, new_v) with
-    None slots matching the optimizer's state arity."""
+               eps: float = 1e-8):
+    """One flat-buffer optimizer step.  ``scalars`` is the same (1, 4)
+    [scale, lr, bc1, bc2] operand ``kernel.update_pass`` takes (signature
+    parity is the fedlint FL202 contract: the oracle must be callable
+    exactly like the kernel).  Returns (new_p, new_m, new_v) with None
+    slots matching the optimizer's state arity."""
+    scale, lr, bc1, bc2 = (scalars[0, 0], scalars[0, 1], scalars[0, 2],
+                           scalars[0, 3])
     g = G * scale
     if opt == "sgd":
         return p - lr * g, None, None

@@ -8,7 +8,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
 
@@ -18,7 +17,6 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
     """x: (B, S, H, P); dt: (B, S, H); A: (H,) negative;
     Bm/Cm: (B, S, H, N) (groups pre-broadcast).  Returns (B, S, H, P)."""
     B, S, H, P = x.shape
-    N = Bm.shape[-1]
     a = dt * A[None, None, :]                       # (B,S,H)
     fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, t.shape[-1])
     xf = fold(x)

@@ -3,7 +3,6 @@ definitionally-correct form: h_t = exp(a_t) h_{t-1} + dt_t B_t x_t^T;
 y_t = C_t h_t."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

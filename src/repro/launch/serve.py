@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +33,15 @@ def generate(model, params, prompts, *, gen_len: int, cache_len: int,
     logits, cache = prefill(params, batch)
     key = jax.random.PRNGKey(seed)
     out = []
+    # split BEFORE the first draw: categorical(key) followed by split(key)
+    # would reuse the key state (fedlint FL103), correlating the first
+    # token's sample with the rest of the stream
+    key, sub = jax.random.split(key)
     tok = (jnp.argmax(logits, -1) if temperature == 0.0 else
-           jax.random.categorical(key, logits / temperature, axis=-1))
+           jax.random.categorical(sub, logits / temperature, axis=-1))
     out.append(tok)
     t0 = time.time()
-    for i in range(gen_len - 1):
+    for _ in range(gen_len - 1):
         logits, cache = decode(params, tok, cache)
         key, sub = jax.random.split(key)
         tok = (jnp.argmax(logits, -1) if temperature == 0.0 else

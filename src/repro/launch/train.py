@@ -84,12 +84,19 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  fault_profile: str = "none", fault_drop: float = -1.0,
                  fault_crash: float = -1.0, fault_delay: float = -1.0,
                  fault_max_delay: int = -1, fault_garble: float = -1.0,
-                 round_deadline: float = 0.0, retry_backoff: int = 0):
+                 fault_garble_scale: float = -1.0,
+                 round_deadline: float = 0.0, retry_backoff: int = 0,
+                 sanitize: bool = False):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
     and metrics sync to host once per K rounds.  ``fused``: flat-buffer
     Pallas server engine (see kernels/fused_update).  ``resume``: path of a
     full-server-state checkpoint written by ``ckpt_path`` — training
-    continues from its round counter toward ``rounds`` total."""
+    continues from its round counter toward ``rounds`` total.
+    ``sanitize``: debug mode — enables ``jax_debug_nans`` and re-jits the
+    round under :mod:`jax.experimental.checkify` with NaN/Inf/OOB checks on
+    the flat aggregate buffers (see :mod:`repro.core.sanitize`); slower,
+    but a poisoned payload fails the round it appears with an error naming
+    the flat dtype group."""
     cfg = get_arch(arch)
     model = build_model(cfg, dtype=dtype, loss_chunk=256)
     fed = FedConfig(
@@ -109,8 +116,14 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         staleness_mode=staleness_mode, fault_profile=fault_profile,
         fault_drop=fault_drop, fault_crash=fault_crash,
         fault_delay=fault_delay, fault_max_delay=fault_max_delay,
-        fault_garble=fault_garble, round_deadline=round_deadline,
-        retry_backoff=retry_backoff)
+        fault_garble=fault_garble, fault_garble_scale=fault_garble_scale,
+        round_deadline=round_deadline, retry_backoff=retry_backoff)
+    if sanitize:
+        # catch NaNs in UNsanitized code too (jit deoptimizes and re-checks
+        # on a NaN output); the checkify probes stay the primary, named
+        # diagnostics — debug_nans is the coarse backstop
+        import jax
+        jax.config.update("jax_debug_nans", True)
     data = build_synthetic_fed_data(cfg, num_clients=num_clients,
                                     examples=examples, seq=seq, iid=iid,
                                     seed=seed)
@@ -132,7 +145,7 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
     elif executor is not None:
         round_kwargs["executor"] = executor
     trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
-                               seed=seed, **round_kwargs)
+                               seed=seed, sanitize=sanitize, **round_kwargs)
     if resume:
         extra = trainer.restore(resume)
         print(f"[train] resumed {resume} at round {trainer.round} "
@@ -274,6 +287,13 @@ def main():
     ap.add_argument("--fault-garble", type=float, default=-1.0,
                     help="P(payload corrupted) — buffered_async only; <0 "
                          "uses the profile")
+    ap.add_argument("--fault-garble-scale", type=float, default=-1.0,
+                    help="corrupted payloads scale by U(-s, s); <0 uses "
+                         "the profile")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug mode: jax_debug_nans + a checkify-wrapped "
+                         "round with NaN/Inf/OOB checks on the flat "
+                         "aggregate buffers (repro.core.sanitize)")
     ap.add_argument("--round-deadline", type=float, default=0.0,
                     help="sync barrier timeout in simulated round-units "
                          "(0: wait forever)")
@@ -304,8 +324,10 @@ def main():
         fault_profile=args.fault_profile, fault_drop=args.fault_drop,
         fault_crash=args.fault_crash, fault_delay=args.fault_delay,
         fault_max_delay=args.fault_max_delay,
-        fault_garble=args.fault_garble, round_deadline=args.round_deadline,
-        retry_backoff=args.retry_backoff)
+        fault_garble=args.fault_garble,
+        fault_garble_scale=args.fault_garble_scale,
+        round_deadline=args.round_deadline,
+        retry_backoff=args.retry_backoff, sanitize=args.sanitize)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

@@ -9,7 +9,6 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer

@@ -14,7 +14,7 @@ Block layout (mamba2):
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +106,6 @@ def causal_conv(x, w, cache: Optional[jax.Array] = None):
 
 def causal_conv_step(x, w, cache):
     """One token: x (B, C); cache (B, d_conv-1, C)."""
-    dconv = w.shape[0]
     ext = jnp.concatenate([cache, x[:, None]], axis=1)         # (B, dc, C)
     y = jnp.einsum("bkc,kc->bc", ext, w)
     return y, ext[:, 1:]

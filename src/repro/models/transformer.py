@@ -17,10 +17,9 @@ Families:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -478,7 +477,6 @@ def _decode_layer(h, lp, ce, kind: str, cfg: ArchConfig, index, window: int):
     h = h + y
     if "mlp" in lp:
         x2 = rmsnorm(h, lp["norm2"], cfg.norm_eps)
-        j = None  # MoE-ness is baked in via param structure
         if "router" in lp["mlp"]:
             y2, _ = moe_ffn(x2[:, None, :], lp["mlp"], cfg.moe)
             y2 = y2[:, 0]

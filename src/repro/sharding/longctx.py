@@ -11,11 +11,8 @@ Used by the perf experiments; exact vs ``decode_attention`` (tested).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.attention import combine_partials, flash_decode_partial
 
@@ -34,7 +31,6 @@ def sharded_flash_decode(q, k_cache, v_cache, index, *, mesh: Mesh,
         m, l, o = flash_decode_partial(q, k, v, index, shard * loc)
         return combine_partials(m, l, o, axis)
 
-    other = tuple(a for a in mesh.axis_names if a != axis)
     if hasattr(jax, "shard_map"):           # jax >= 0.6
         smap, check_kw = jax.shard_map, "check_vma"
     else:                                   # jax 0.4.x

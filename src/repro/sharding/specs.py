@@ -17,7 +17,7 @@ roofline notes.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -45,8 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 # fold constant separating the fault streams from the round's client/meta
-# keys and from the participation mask's 0x5712A661 fold
-FAULT_FOLD = 0x00FA0175
+# keys and from the participation mask's fold — one registry entry per
+# stream, uniqueness enforced at import time and by fedlint (FL102)
+from repro.core.rngtags import FAULT_FOLD, SPEED_SEED
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,10 +125,14 @@ def resolve_faults(fed) -> FaultConfig:
             "(late reports arrive 1..max_delay rounds late), got "
             f"{fc.max_delay}")
     if fc.garble_scale <= 0 or fc.speed_tail < 0 or fc.stagger < 0:
+        # the pre-fedlint message named the FaultConfig internals
+        # ("garble_scale=", "speed_tail=", "stagger=") — none of which are
+        # settable FedConfig fields, so the error pointed nowhere (FL302)
         raise ValueError(
-            f"garble_scale={fc.garble_scale} must be > 0 and "
-            f"speed_tail={fc.speed_tail} / stagger={fc.stagger} must be "
-            ">= 0")
+            f"fault_garble_scale={fc.garble_scale} must be > 0, "
+            f"fault_speed_tail={fc.speed_tail} must be >= 0, and the "
+            f"dispatch stagger ({fc.stagger}; FaultConfig-only, not a "
+            "FedConfig knob) must be >= 0")
     if fc.deadline < 0:
         raise ValueError(
             f"round_deadline={fc.deadline} must be >= 0 (simulated "
@@ -205,5 +210,5 @@ def heavy_tail_speeds(seed: int, num_clients: int,
     ``FederatedData.client_speeds`` and ``sample_round`` ships the selected
     cohort's slice for simulated-time accounting (benchmarks, deadline
     studies)."""
-    rng = np.random.default_rng((seed, 0x5BEED))
+    rng = np.random.default_rng((seed, SPEED_SEED))
     return np.exp(sigma * rng.standard_normal(num_clients)).astype(np.float32)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.attention import (chunked_attention, combine_partials,
+from repro.models.attention import (chunked_attention,
                                     decode_attention, flash_attention,
                                     flash_decode_partial, simple_attention)
 

@@ -16,7 +16,6 @@ System invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests skip; unit tests still run

@@ -32,7 +32,6 @@ from repro.checkpoint import restore, save
 from repro.configs.base import FedConfig
 from repro.core import (init_server_state, make_federated_round,
                         resolve_server_lr, server_opt, weighted_mean)
-from repro.core.meta import meta_update_through_aggregation
 from repro.models.model import Model
 
 

@@ -1,6 +1,5 @@
 """Data pipeline (partitioners, meta-set overlap control, cohort sampling)
 and optimizer/schedule units."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 try:

@@ -1,0 +1,418 @@
+"""fedlint self-tests: one good + one bad fixture per pass.
+
+Each fixture is a tiny synthetic tree written under tmp_path; ``run_on``
+materializes it and runs the full analyzer.  Bad fixtures must produce the
+documented FLNNN code (and ONLY findings of that code, so passes never
+bleed into each other's fixtures); good fixtures must come back clean.
+"""
+import textwrap
+
+from repro.analysis.fedlint import Finding, run_fedlint
+from repro.analysis.fedlint.__main__ import main as fedlint_main
+
+
+def run_on(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_fedlint([str(tmp_path)])
+
+
+def codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# FL001 — parse failure
+# ---------------------------------------------------------------------------
+def test_fl001_unparseable_file(tmp_path):
+    found = run_on(tmp_path, {"broken.py": "def f(:\n"})
+    assert codes(found) == ["FL001"]
+
+
+# ---------------------------------------------------------------------------
+# FL101 — inline constant rng tag
+# ---------------------------------------------------------------------------
+def test_fl101_inline_fold_tag(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def derive(k):
+            return jax.random.fold_in(k, 0x1234)
+    """})
+    assert codes(found) == ["FL101"]
+    assert "rngtags" in found[0].message
+
+
+def test_fl101_local_constant_tag(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        MY_TAG = 99
+
+        def derive(k):
+            return jax.random.fold_in(k, MY_TAG)
+    """})
+    assert codes(found) == ["FL101"]
+
+
+def test_fl101_good_registry_import_and_dynamic_tags(tmp_path):
+    found = run_on(tmp_path, {
+        "core/rngtags.py": "EVAL_FOLD = 10_000\n",
+        "mod.py": """\
+            import jax
+            from core.rngtags import EVAL_FOLD
+
+            def derive(k, i):
+                a = jax.random.fold_in(k, EVAL_FOLD)
+                b = jax.random.fold_in(k, i)          # dynamic: fine
+                return a, b
+        """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL102 — duplicate tag values
+# ---------------------------------------------------------------------------
+def test_fl102_registry_collision(tmp_path):
+    found = run_on(tmp_path, {"core/rngtags.py": """\
+        A_FOLD = 0x42
+        B_FOLD = 0x42
+    """})
+    assert codes(found) == ["FL102"]
+    assert "A_FOLD" in found[0].message and "B_FOLD" in found[0].message
+
+
+def test_fl102_good_distinct_registry(tmp_path):
+    found = run_on(tmp_path, {"core/rngtags.py": """\
+        A_FOLD = 0x42
+        B_FOLD = 0x43
+    """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL103 — key consumed twice
+# ---------------------------------------------------------------------------
+def test_fl103_key_reuse(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def sample(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.uniform(key, (2,))
+            return a + b
+    """})
+    assert codes(found) == ["FL103"]
+    assert "'key'" in found[0].message
+
+
+def test_fl103_good_split_and_branches(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def sample(key, flag):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.uniform(k2, (2,))
+            # if/else arms are alternatives, not sequential consumption
+            if flag:
+                c = jax.random.normal(k1, (2,))
+            else:
+                c = jax.random.uniform(k1, (2,))
+            return a + b + c
+    """})
+    assert found == []
+
+
+def test_fl103_rebind_resets_tracking(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def sample(key, n):
+            out = []
+            for _ in range(n):
+                key, sub = jax.random.split(key)
+                out.append(jax.random.normal(sub, (2,)))
+            return out
+    """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL201/FL202/FL203 — kernel / ref / ops contracts
+# ---------------------------------------------------------------------------
+_OPS_DISPATCH = """\
+    from . import kernel as K
+    from . import ref as R
+
+    def foo(x, *, use_ref=False):
+        if use_ref:
+            return R.foo_ref(x)
+        return K.foo_pass(x)
+"""
+
+
+def test_fl201_missing_oracle(tmp_path):
+    found = run_on(tmp_path, {
+        "kernels/foo/kernel.py": "def foo_pass(x):\n    return x\n",
+        "kernels/foo/ref.py": "",
+        "kernels/foo/ops.py": _OPS_DISPATCH,
+    })
+    assert codes(found) == ["FL201"]
+    assert "foo_ref" in found[0].message
+
+
+def test_fl202_signature_drift(tmp_path):
+    found = run_on(tmp_path, {
+        "kernels/foo/kernel.py":
+            "def foo_pass(x, *, block_rows=8):\n    return x\n",
+        "kernels/foo/ref.py": "def foo_ref(x, y):\n    return x + y\n",
+        "kernels/foo/ops.py": _OPS_DISPATCH,
+    })
+    assert codes(found) == ["FL202"]
+    assert "signature drift" in found[0].message
+
+
+def test_fl203_no_use_ref_dispatch(tmp_path):
+    found = run_on(tmp_path, {
+        "kernels/foo/kernel.py": "def foo_pass(x):\n    return x\n",
+        "kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+        "kernels/foo/ops.py": """\
+            from . import kernel as K
+
+            def foo(x):
+                return K.foo_pass(x)
+        """,
+    })
+    assert codes(found) == ["FL203"]
+    assert "use_ref" in found[0].message
+
+
+def test_kernel_triple_good(tmp_path):
+    found = run_on(tmp_path, {
+        "kernels/foo/kernel.py":
+            "def foo_pass(x, *, block_rows=8, interpret=False):\n"
+            "    return x\n",
+        "kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+        "kernels/foo/ops.py": _OPS_DISPATCH,
+    })
+    assert found == []
+
+
+def test_kernel_rules_ignore_non_kernel_dirs(tmp_path):
+    # a kernel.py outside kernels/ is not part of the contract
+    found = run_on(tmp_path, {
+        "misc/kernel.py": "def bar_pass(x):\n    return x\n"})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL204 — custom_vjp without defvjp
+# ---------------------------------------------------------------------------
+def test_fl204_missing_defvjp(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        @jax.custom_vjp
+        def f(x):
+            return x * x
+    """})
+    assert codes(found) == ["FL204"]
+    assert "f.defvjp" in found[0].message
+
+
+def test_fl204_good_paired_defvjp(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        @jax.custom_vjp
+        def f(x):
+            return x * x
+
+        def f_fwd(x):
+            return x * x, x
+
+        def f_bwd(res, g):
+            return (2.0 * res * g,)
+
+        f.defvjp(f_fwd, f_bwd)
+    """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL301 — registry capability surfaces
+# ---------------------------------------------------------------------------
+def test_fl301_engine_missing_capabilities(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        from engines import register_engine
+
+        @register_engine("half")
+        class HalfEngine:
+            accepts = ("delta",)
+            preferred = "delta"
+    """})
+    assert codes(found) == ["FL301"]
+    msg = found[0].message
+    assert "is_async" in msg and "codec_capabilities" in msg
+
+
+def test_fl301_good_capabilities_via_base(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        from engines import register_engine
+
+        class Base:
+            meta_capabilities = ("none",)
+            codec_capabilities = ("identity",)
+            is_async = False
+
+        @register_engine("full")
+        class FullEngine(Base):
+            accepts = ("delta",)
+            preferred = "delta"
+    """})
+    assert found == []
+
+
+def test_fl301_algorithm_without_pseudo_gradient(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        from algorithms import register_algorithm
+
+        register_algorithm("fedavg", description="plain averaging")
+    """})
+    assert codes(found) == ["FL301"]
+    assert "pseudo_gradient" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# FL302 — stale ValueError field guidance
+# ---------------------------------------------------------------------------
+def test_fl302_stale_config_field(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        class FedConfig:
+            cohort_size: int = 4
+
+        def guard(cfg):
+            raise ValueError("bad setup; set num_cohorts=8 instead")
+    """})
+    assert codes(found) == ["FL302"]
+    assert "num_cohorts" in found[0].message
+
+
+def test_fl302_good_real_field_and_param(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        class FedConfig:
+            cohort_size: int = 4
+
+        def guard(cfg, server_lr):
+            raise ValueError(
+                f"bad setup (server_lr={server_lr}); set cohort_size=8")
+    """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# FL401/FL402/FL403 — jit hygiene
+# ---------------------------------------------------------------------------
+def test_fl401_item_and_float_in_jit(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            s = x.sum().item()
+            return float(x) + s
+    """})
+    assert codes(found) == ["FL401", "FL401"]
+
+
+def test_fl402_host_numpy_in_scanned_body(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+        import numpy as np
+        from jax import lax
+
+        def step(carry, x):
+            return carry + np.mean(x), None
+
+        def run(xs):
+            return lax.scan(step, 0.0, xs)
+    """})
+    assert codes(found) == ["FL402"]
+
+
+def test_fl403_wall_clock_in_jit(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import time
+        import jax
+
+        @jax.jit
+        def f(x):
+            t = time.time()
+            return x + t
+    """})
+    assert codes(found) == ["FL403"]
+
+
+def test_jit_rules_good_host_code_untouched(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import time
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return x * 2.0
+
+        def host_loop(x):
+            t0 = time.time()                 # host side: fine
+            y = np.asarray(f(x)).item()      # outside the traced body: fine
+            return y, time.time() - t0
+    """})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions, output format, CLI exit codes
+# ---------------------------------------------------------------------------
+def test_suppression_comment_drops_finding(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def derive(k):
+            return jax.random.fold_in(k, 0x1234)  # fedlint: disable=FL101
+    """})
+    assert found == []
+
+
+def test_suppression_is_code_specific(tmp_path):
+    found = run_on(tmp_path, {"mod.py": """\
+        import jax
+
+        def derive(k):
+            return jax.random.fold_in(k, 0x1234)  # fedlint: disable=FL999
+    """})
+    assert codes(found) == ["FL101"]
+
+
+def test_finding_format():
+    f = Finding("src/x.py", 12, "FL101", "inline tag")
+    assert f.format() == "src/x.py:12: FL101 inline tag"
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "mod.py").write_text(
+        "import jax\n\ndef f(k):\n    return jax.random.fold_in(k, 7)\n")
+    assert fedlint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "FL101" in out
+
+    good = tmp_path / "good"
+    good.mkdir()
+    (good / "mod.py").write_text("def f(x):\n    return x\n")
+    assert fedlint_main([str(good)]) == 0
+    assert "clean" in capsys.readouterr().out

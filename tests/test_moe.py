@@ -3,7 +3,6 @@ semantics, shared experts, router aux loss."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests skip; unit tests still run

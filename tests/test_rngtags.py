@@ -1,0 +1,97 @@
+"""rng tag registry: uniqueness + bit-exact stream regression.
+
+The pins below are inline literals ON PURPOSE: if anyone edits
+``repro.core.rngtags`` the diff shows up here, and the stream tests prove
+the centralization never reseeded a historical stream (every pre-registry
+call site used exactly these constants inline).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rngtags
+from repro.core.rngtags import TAGS, round_key
+from repro.sim.faults import heavy_tail_speeds
+
+
+def bits(k):
+    """Raw uint32 words of a PRNG key, old- or new-style."""
+    if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
+        return np.asarray(jax.random.key_data(k))
+    return np.asarray(k)
+
+
+# ---------------------------------------------------------------------------
+# registry integrity
+# ---------------------------------------------------------------------------
+def test_tags_are_globally_unique():
+    assert len(set(TAGS.values())) == len(TAGS)
+
+
+def test_tags_covers_every_exported_constant():
+    assert TAGS == {
+        "PARTICIPATION_FOLD": rngtags.PARTICIPATION_FOLD,
+        "FAULT_FOLD": rngtags.FAULT_FOLD,
+        "EVAL_FOLD": rngtags.EVAL_FOLD,
+        "ROUND_OFFSET": rngtags.ROUND_OFFSET,
+        "META_SAMPLE_SEED": rngtags.META_SAMPLE_SEED,
+        "SPEED_SEED": rngtags.SPEED_SEED,
+    }
+
+
+def test_check_unique_raises_on_collision():
+    saved = dict(TAGS)
+    try:
+        TAGS["SNEAKY_FOLD"] = rngtags.PARTICIPATION_FOLD
+        with pytest.raises(ValueError, match="collision"):
+            rngtags._check_unique()
+    finally:
+        TAGS.clear()
+        TAGS.update(saved)
+    rngtags._check_unique()                   # restored registry is clean
+
+
+# ---------------------------------------------------------------------------
+# historical values pinned bit-exact (the pre-registry inline constants)
+# ---------------------------------------------------------------------------
+def test_pinned_tag_values():
+    assert rngtags.PARTICIPATION_FOLD == 0x5712A661
+    assert rngtags.FAULT_FOLD == 0x00FA0175
+    assert rngtags.EVAL_FOLD == 10_000
+    assert rngtags.ROUND_OFFSET == 0
+    assert rngtags.META_SAMPLE_SEED == 7_777
+    assert rngtags.SPEED_SEED == 0x5BEED
+
+
+def test_round_key_matches_historical_derivation():
+    k = jax.random.PRNGKey(3)
+    for r in (0, 1, 17, 4096):
+        np.testing.assert_array_equal(
+            bits(round_key(k, r)), bits(jax.random.fold_in(k, r)))
+
+
+def test_registry_folds_match_inline_constants():
+    k = jax.random.PRNGKey(11)
+    np.testing.assert_array_equal(
+        bits(jax.random.fold_in(k, rngtags.PARTICIPATION_FOLD)),
+        bits(jax.random.fold_in(k, 0x5712A661)))
+    np.testing.assert_array_equal(
+        bits(jax.random.fold_in(k, rngtags.FAULT_FOLD)),
+        bits(jax.random.fold_in(k, 0x00FA0175)))
+    np.testing.assert_array_equal(
+        bits(jax.random.fold_in(k, rngtags.EVAL_FOLD)),
+        bits(jax.random.fold_in(k, 10_000)))
+
+
+def test_host_streams_match_inline_seed_tuples():
+    speeds = heavy_tail_speeds(5, 32)
+    rng = np.random.default_rng((5, 0x5BEED))
+    np.testing.assert_array_equal(
+        speeds, np.exp(0.5 * rng.standard_normal(32)).astype(np.float32))
+
+    # D_meta sampling stream (repro.data.pipeline.sample_meta)
+    a = np.random.default_rng((9, rngtags.META_SAMPLE_SEED, 2)).integers(
+        0, 1 << 30, 8)
+    b = np.random.default_rng((9, 7_777, 2)).integers(0, 1 << 30, 8)
+    np.testing.assert_array_equal(a, b)

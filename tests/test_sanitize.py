@@ -1,0 +1,106 @@
+"""--sanitize runtime smoke tests.
+
+A clean sanitized run must be bit-identical to the unsanitized build (the
+checkify transform is observability, not arithmetic), and an injected
+NaN payload — a garbled async uplink whose multiplier range is infinite —
+must be caught the round it happens with an error that names the flat
+aggregate group.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.experimental.checkify import JaxRuntimeError
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedTrainer
+from repro.core.flat import flatten_tree, make_flat_spec
+from repro.core.sanitize import (check_flat_groups, checkify_round,
+                                 throw_if_error)
+from test_async_faults import (COHORT, _toy_fed_data, make_mlp_model,
+                               tree_equal)
+
+
+def _sync_fed():
+    return FedConfig(cohort=COHORT, fused_update=True,
+                     cohort_strategy="scan", meta=False)
+
+
+def _async_fed(**over):
+    base = FedConfig(cohort=COHORT, fused_update=True,
+                     cohort_strategy="scan", meta=False,
+                     engine="buffered_async", async_capacity=2 * COHORT)
+    return dataclasses.replace(base, **over) if over else base
+
+
+# ---------------------------------------------------------------------------
+# clean runs: sanitizer is additive
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fed_fn", [_sync_fed, _async_fed],
+                         ids=["sync", "async"])
+def test_sanitized_clean_run_bit_identical(fed_fn):
+    model, data = make_mlp_model(), _toy_fed_data()
+    states = []
+    for sanitize in (False, True):
+        tr = FederatedTrainer(model, fed_fn(), rounds_per_call=1, seed=0,
+                              sanitize=sanitize)
+        hist = tr.run(data, rounds=2, cohort=COHORT, batch=8)
+        assert len(hist) == 2
+        states.append(tr.state)
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(tr.state["params"]))
+    assert tree_equal(states[0]["params"], states[1]["params"])
+
+
+# ---------------------------------------------------------------------------
+# injected NaN payload is caught, with the flat group named
+# ---------------------------------------------------------------------------
+def test_nan_garble_payload_caught_by_sanitizer():
+    # garble every alive client; U(-inf, inf) multipliers are NaN, so the
+    # decoded deltas hitting the pool are non-finite
+    fed = _async_fed(fault_garble=1.0, fault_garble_scale=float("inf"))
+    model, data = make_mlp_model(), _toy_fed_data()
+    tr = FederatedTrainer(model, fed, rounds_per_call=1, seed=0,
+                          sanitize=True)
+    with pytest.raises(JaxRuntimeError, match="flat group"):
+        tr.run(data, rounds=2, cohort=COHORT, batch=8)
+
+
+def test_nan_garble_unsanitized_is_silent():
+    # the failure mode the sanitizer exists for: without it the poisoned
+    # round completes and the NaN lands in the server parameters
+    fed = _async_fed(fault_garble=1.0, fault_garble_scale=float("inf"))
+    model, data = make_mlp_model(), _toy_fed_data()
+    tr = FederatedTrainer(model, fed, rounds_per_call=1, seed=0)
+    tr.run(data, rounds=2, cohort=COHORT, batch=8)
+    leaves = jax.tree.leaves(tr.state["params"])
+    assert any(not np.isfinite(np.asarray(l)).all() for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# probe unit test: the message is actionable
+# ---------------------------------------------------------------------------
+def test_check_flat_groups_message_names_group_and_site():
+    model = make_mlp_model()
+    params = model.init(jax.random.PRNGKey(0))
+    spec = make_flat_spec(params)
+
+    def probe(bufs):
+        check_flat_groups(spec, bufs, "unit-test probe")
+        return bufs
+
+    bufs = flatten_tree(spec, params)
+    err, _ = jax.jit(checkify_round(probe))(bufs)
+    throw_if_error(err)                       # clean buffers: no error
+
+    poisoned = [b.at[0, 0].set(jnp.nan) for b in bufs]
+    err, _ = jax.jit(checkify_round(probe))(poisoned)
+    with pytest.raises(JaxRuntimeError) as exc_info:
+        throw_if_error(err)
+    msg = str(exc_info.value)
+    assert "flat group 0" in msg
+    assert "unit-test probe" in msg
+    assert "unflatten_tree" in msg

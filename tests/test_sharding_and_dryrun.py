@@ -18,7 +18,7 @@ from repro import configs
 from repro.launch.mesh import make_debug_mesh
 from repro.models.model import build_model
 from repro.sharding.specs import (cohort_grad_shardings, param_spec,
-                                  param_shardings, state_shardings)
+                                  param_shardings)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

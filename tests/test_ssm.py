@@ -3,7 +3,6 @@ step == full scan, conv cache semantics, full block prefill/decode parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests skip; unit tests still run
