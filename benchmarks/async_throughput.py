@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from common import bench_tracker
 from repro.configs.base import FedConfig
 from repro.core import FederatedTrainer
 from repro.data.pipeline import FederatedData
@@ -88,11 +89,11 @@ BASE = FedConfig(algorithm="uga", meta=True, cohort=COHORT,
                  cohort_strategy="scan")
 
 
-def run_arm(model, data, fed: FedConfig, rounds: int):
+def run_arm(model, data, fed: FedConfig, rounds: int, tracker=None):
     """One trained arm through the facade; returns (trainer, history,
     rounds_per_s wall-clock)."""
     trainer = FederatedTrainer(model, fed, rounds_per_call=ROUNDS_PER_CALL,
-                               seed=0)
+                               seed=0, tracker=tracker)
     t0 = time.perf_counter()
     hist = trainer.run(data, rounds=rounds, cohort=COHORT, batch=BATCH,
                        meta_batch=BATCH)
@@ -122,8 +123,12 @@ def main():
     ap.add_argument("--fast", action="store_true",
                     help="fewer rounds (CI smoke); every gate still runs")
     ap.add_argument("--out", default="BENCH_async_throughput.json")
+    ap.add_argument("--run-dir", default=None,
+                    help="jsonl tracker dir (default: "
+                         "benchmarks/runs/async_throughput)")
     args = ap.parse_args()
     rounds = 8 if args.fast else 20
+    trk = bench_tracker("async_throughput", args.run_dir)
 
     model = make_mlp_model()
     data = make_data()
@@ -133,7 +138,9 @@ def main():
     # barrier with no deadline waits for them, so its training bits match
     # the fault-free run exactly; only its simulated time differs)
     fed_sync = BASE
-    tr_sync, hist_sync, rps_sync = run_arm(model, data, fed_sync, rounds)
+    trk.log_event("arm_start", {"arm": "sync", "rounds": rounds})
+    tr_sync, hist_sync, rps_sync = run_arm(model, data, fed_sync, rounds,
+                                           tracker=trk)
 
     # arm 2: fault-free async, K = capacity = cohort -> every tick pools
     # the whole cohort and flushes it in client order through the same
@@ -141,14 +148,18 @@ def main():
     fed_clean = dataclasses.replace(
         BASE, engine="buffered_async", async_buffer=COHORT,
         async_capacity=COHORT)
-    tr_clean, hist_clean, rps_clean = run_arm(model, data, fed_clean, rounds)
+    trk.log_event("arm_start", {"arm": "async_clean", "rounds": rounds})
+    tr_clean, hist_clean, rps_clean = run_arm(model, data, fed_clean, rounds,
+                                              tracker=trk)
 
     # arm 3: async under the 20%-stragglers profile, stepping every K =
     # cohort/2 arrivals with invsqrt staleness discounting
     fed_strag = dataclasses.replace(
         BASE, engine="buffered_async", async_buffer=ASYNC_K,
         async_capacity=2 * COHORT, fault_profile="stragglers")
-    tr_strag, hist_strag, rps_strag = run_arm(model, data, fed_strag, rounds)
+    trk.log_event("arm_start", {"arm": "async_stragglers", "rounds": rounds})
+    tr_strag, hist_strag, rps_strag = run_arm(model, data, fed_strag, rounds,
+                                              tracker=trk)
 
     # ---- simulated-time throughput -------------------------------------
     fed_sync_strag = dataclasses.replace(BASE, fault_profile="stragglers")
@@ -212,6 +223,8 @@ def main():
              "staleness_max", "staleness_hist", "fault_delayed")},
         **gates,
     }
+    trk.log_event("bench_report", report)
+    trk.finish()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(json.dumps(report, indent=1))

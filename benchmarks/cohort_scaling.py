@@ -44,7 +44,7 @@ from repro.configs.base import FedConfig
 from repro.core import init_server_state, make_federated_round
 from repro.launch.mesh import make_debug_mesh
 from repro.sharding.specs import cohort_grad_shardings
-from common import peak_memory_bytes  # noqa: E402  (benchmarks/ layout)
+from common import bench_tracker, peak_memory_bytes  # noqa: E402
 from round_latency import make_mlp_model, D, CLASSES
 
 BATCH, LOCAL_STEPS, CHUNK = 8, 2, 8
@@ -104,11 +104,16 @@ def main():
     ap.add_argument("--fast", action="store_true",
                     help="skip the vmap contrast sweep (CI smoke)")
     ap.add_argument("--out", default="BENCH_cohort_scaling.json")
+    ap.add_argument("--run-dir", default=None,
+                    help="jsonl tracker dir (default: "
+                         "benchmarks/runs/cohort_scaling)")
     args = ap.parse_args()
+    trk = bench_tracker("cohort_scaling", args.run_dir)
 
     model = make_mlp_model()
 
     # --- memory sweep: chunked temp bytes must stay flat in the cohort ---
+    trk.log_event("arm_start", {"arm": "memory_sweep"})
     cohorts = (64, 256, 1024)
     chunked_mem = {c: temp_bytes(model, make_fed(c, CHUNK), c)
                    for c in cohorts}
@@ -175,6 +180,8 @@ def main():
         "pass_chunk_eq_cohort_vs_vmap_1e6": bool(vmap_err <= 1e-6),
         "pass_hypergrad_1e5": bool(hg_err <= 1e-5),
     }
+    trk.log_event("bench_report", report)
+    trk.finish()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(json.dumps(report, indent=1))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from common import bench_tracker
 from repro.comm import comm_bytes_per_client, resolve_codec
 from repro.configs.base import FedConfig
 from repro.core import FederatedTrainer, init_server_state
@@ -77,7 +78,8 @@ def make_data(n=2048, clients=16, seed=0):
                          meta_indices=meta, seed=seed)
 
 
-def run_arm(model, data, codec: str, error_feedback: bool, rounds: int):
+def run_arm(model, data, codec: str, error_feedback: bool, rounds: int,
+            tracker=None):
     """One trained arm through the facade; returns (loss_curve,
     bytes_per_round, rounds_per_s)."""
     fed = FedConfig(algorithm="uga", meta=True, cohort=COHORT,
@@ -85,7 +87,7 @@ def run_arm(model, data, codec: str, error_feedback: bool, rounds: int):
                     meta_lr=0.05, clip_norm=1.0, fused_update=True,
                     codec=codec, error_feedback=error_feedback)
     trainer = FederatedTrainer(model, fed, rounds_per_call=ROUNDS_PER_CALL,
-                               seed=0)
+                               seed=0, tracker=tracker)
     # first run compiles AND yields the gate curve; rewinding the SAME
     # trainer to round 0 keeps its RoundFnCache warm (a fresh trainer
     # would rebuild the jit closures and the timed run would measure
@@ -109,8 +111,12 @@ def main():
                     help="fewer timed rounds (CI smoke); the 20-round "
                          "numerics gates always run in full")
     ap.add_argument("--out", default="BENCH_comm_compression.json")
+    ap.add_argument("--run-dir", default=None,
+                    help="jsonl tracker dir (default: "
+                         "benchmarks/runs/comm_compression)")
     args = ap.parse_args()
     rounds = 20                      # the gate horizon; timing reuses it
+    trk = bench_tracker("comm_compression", args.run_dir)
 
     model = make_mlp_model()
     data = make_data()
@@ -122,7 +128,10 @@ def main():
     for label, codec, ef in ARMS:
         if args.fast and label in ("int8", "topk_ef"):
             continue
-        curve, bytes_round, rps = run_arm(model, data, codec, ef, rounds)
+        trk.log_event("arm_start", {"arm": label, "codec": codec,
+                                    "error_feedback": ef, "rounds": rounds})
+        curve, bytes_round, rps = run_arm(model, data, codec, ef, rounds,
+                                          tracker=trk)
         arms[label] = {
             "codec": codec, "error_feedback": ef,
             "rounds_per_s": round(rps, 2),
@@ -162,6 +171,8 @@ def main():
         "arms": arms,
         **gates,
     }
+    trk.log_event("bench_report", report)
+    trk.finish()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(json.dumps(report, indent=1))

@@ -12,6 +12,7 @@ method ordering, rounds-to-milestone ratios, and final-accuracy gaps.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -32,6 +33,19 @@ METHODS = {
     "fedmeta": dict(algorithm="fedavg", meta=True, share=False),
     "fedmeta_uga": dict(algorithm="uga", meta=True, share=False),
 }
+
+
+def bench_tracker(bench: str, run_dir: Optional[str] = None):
+    """The benchmarks' shared metric sink: a ``jsonl`` tracker writing
+    ``metrics.jsonl`` under ``benchmarks/runs/<bench>/`` (or ``run_dir``).
+    Every bench script routes its per-round records and arm/report events
+    through this instead of ad-hoc prints, so runs are diffable and
+    machine-readable alongside the BENCH_*.json verdicts."""
+    from repro.obs import resolve_tracker
+    base = run_dir or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                   "runs", bench)
+    os.makedirs(base, exist_ok=True)
+    return resolve_tracker("jsonl", run_dir=base)
 
 
 def evaluate(model, params, data: FederatedData, idx: np.ndarray,
@@ -59,7 +73,8 @@ def train_method(model, data: FederatedData, method: str, *, rounds: int,
                  lr_decay: float = 0.996, meta_batch: int = 32,
                  prox_mu: float = 2e-4, uga_server_lr: Optional[float] = None,
                  clip_norm: float = 2.0, fused: bool = True,
-                 rounds_per_call: int = 4) -> List[Dict[str, float]]:
+                 rounds_per_call: int = 4,
+                 tracker=None) -> List[Dict[str, float]]:
     """uga_server_lr: eta_g for the UGA variants — defaults to
     local_steps*lr*2 so one unbiased server step has a per-round
     displacement comparable to FedAvg's local_steps biased ones (the paper
@@ -89,7 +104,7 @@ def train_method(model, data: FederatedData, method: str, *, rounds: int,
                     clip_norm=clip_norm, fused_update=fused)
     loss_jit = jax.jit(model.loss)
     trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
-                               seed=seed)
+                               seed=seed, tracker=tracker)
 
     def sample_meta(d, r, mb_size, sample):
         if not kw["meta"]:
@@ -127,15 +142,21 @@ def rounds_to_accuracy(history: Sequence[Dict], target: float) -> Optional[int]:
 
 def run_methods(model, data, *, methods: Sequence[str], rounds: int,
                 cohort: int, batch: int, local_steps: int, lr: float,
-                eval_idx: np.ndarray, seed: int = 0, **kw
+                eval_idx: np.ndarray, seed: int = 0, tracker=None, **kw
                 ) -> Dict[str, List[Dict]]:
     out = {}
     for m in methods:
+        if tracker is not None:
+            tracker.log_event("method_start", {"method": m, "rounds": rounds})
         t0 = time.time()
         out[m] = train_method(model, data, m, rounds=rounds, cohort=cohort,
                               batch=batch, local_steps=local_steps, lr=lr,
-                              eval_idx=eval_idx, seed=seed, **kw)
+                              eval_idx=eval_idx, seed=seed, tracker=tracker,
+                              **kw)
         out[m + "__wall_s"] = time.time() - t0
+        if tracker is not None:
+            tracker.log_event("method_finish",
+                              {"method": m, "wall_s": out[m + "__wall_s"]})
     return out
 
 
@@ -175,6 +196,5 @@ def peak_memory_bytes(fn: Callable, *args, **kwargs) -> Dict[str, int]:
         live = 0
         for d in jax.live_arrays():
             live += d.nbytes
-        del res
         out["live_bytes"] = int(live)
     return out

@@ -1,0 +1,205 @@
+"""Observability overhead benchmark + the PR 9 acceptance gates.
+
+Runs the CPU smoke config (the round_latency MLP, through-aggregation
+meta so the ctrl slot is live) through the REAL driver and emits
+``BENCH_obs_overhead.json``.  Self-checking (non-zero exit on any gate
+failure, so CI runs it directly):
+
+  * **noop bit-identity** — a ``tracker="noop"`` run leaves params, opt
+    state, the ctrl slot AND the history records bit-identical to an
+    untracked run (observability must never perturb training);
+  * **jsonl overhead <= 5%** — steady-state rounds/s with the ``jsonl``
+    tracker (every record + phase event serialized to disk) within 5% of
+    the untracked arm.  Timing is warm: each arm compiles first, then
+    the best of REPS timed continuation segments on the same trainer's
+    hot jit cache is compared;
+  * **retention exactness** — a managed run saving every round with
+    ``keep_last=3`` leaves EXACTLY 3 blobs plus the manifest;
+  * **mid-run resume bit-identity** — ``resume_latest()`` from the
+    managed store continues bit-identically vs never stopping, for the
+    sync fused engine AND ``buffered_async`` (pool state included).
+
+Usage:  PYTHONPATH=src python benchmarks/obs_overhead.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import time
+
+import jax
+import numpy as np
+
+from common import bench_tracker
+from repro.configs.base import FedConfig
+from repro.core import FederatedTrainer
+from async_throughput import make_data, make_mlp_model
+
+COHORT, BATCH = 8, 32
+ROUNDS_PER_CALL = 4
+
+BASE = FedConfig(algorithm="uga", meta=True,
+                 meta_mode="through_aggregation", cohort=COHORT,
+                 local_steps=2, client_lr=0.05, server_lr=0.1,
+                 meta_lr=0.05, ctrl_lr=0.01, clip_norm=1.0,
+                 fused_update=True)
+
+ASYNC = FedConfig(algorithm="uga", meta=True, cohort=COHORT,
+                  local_steps=2, client_lr=0.05, server_lr=0.1,
+                  meta_lr=0.05, clip_norm=1.0, fused_update=True,
+                  cohort_strategy="scan", engine="buffered_async",
+                  async_buffer=COHORT // 2, async_capacity=2 * COHORT,
+                  fault_profile="stragglers")
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def timed_arm(model, data, *, warm: int, seg: int, reps: int,
+              **trainer_kw):
+    """Compile with a warm segment, then time ``reps`` continuation
+    segments on the SAME trainer (hot RoundFnCache; a fresh trainer per
+    segment would measure compilation).  Returns (trainer, best
+    rounds/s)."""
+    tr = FederatedTrainer(model, BASE, rounds_per_call=ROUNDS_PER_CALL,
+                          seed=0, **trainer_kw)
+    tr.run(data, rounds=warm, cohort=COHORT, batch=BATCH, meta_batch=BATCH)
+    best = 0.0
+    for i in range(reps):
+        t0 = time.perf_counter()
+        tr.run(data, rounds=warm + (i + 1) * seg, cohort=COHORT,
+               batch=BATCH, meta_batch=BATCH)
+        best = max(best, seg / (time.perf_counter() - t0))
+    return tr, best
+
+
+def resume_gate(model, data, fed, run_dir: str):
+    """4 managed rounds -> fresh trainer -> resume_latest -> 8 total,
+    bit-compared (full state + history) against a straight 8-round run."""
+    kw = dict(rounds_per_call=2, seed=0)
+    tr = FederatedTrainer(model, fed, run_dir=run_dir, checkpoint_every=2,
+                          keep_last=2, **kw)
+    tr.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=BATCH)
+    tr.finish()
+    tr2 = FederatedTrainer(model, fed, run_dir=run_dir, checkpoint_every=2,
+                           keep_last=2, **kw)
+    step = tr2.resume_latest()
+    tr2.run(data, rounds=8, cohort=COHORT, batch=BATCH, meta_batch=BATCH)
+    tr2.finish()
+    straight = FederatedTrainer(model, fed, **kw)
+    straight.run(data, rounds=8, cohort=COHORT, batch=BATCH,
+                 meta_batch=BATCH)
+    return (step == 4 and tree_equal(tr2.state, straight.state)
+            and tr2.history == straight.history)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="short segments (CI smoke)")
+    ap.add_argument("--out", default="BENCH_obs_overhead.json")
+    ap.add_argument("--run-dir", default=None,
+                    help="scratch + tracker dir (default: "
+                         "benchmarks/runs/obs_overhead)")
+    args = ap.parse_args()
+
+    warm = 8
+    seg = 60 if args.fast else 200
+    reps = 3
+
+    run_dir = args.run_dir or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "runs", "obs_overhead")
+    # per-gate scratch must start empty: the manager (correctly) refuses
+    # to save step 1 into a directory whose manifest already names step 10
+    # from a previous invocation
+    for sub in ("jsonl_arm", "retention", "resume_sync", "resume_async"):
+        shutil.rmtree(os.path.join(run_dir, sub), ignore_errors=True)
+    os.makedirs(run_dir, exist_ok=True)
+    trk = bench_tracker("obs_overhead", run_dir)
+
+    model, data = make_mlp_model(), make_data()
+    total = warm + reps * seg
+
+    # --- arm 1: untracked reference --------------------------------------
+    trk.log_event("arm_start", {"arm": "untracked", "rounds": total})
+    un_tr, un_rps = timed_arm(model, data, warm=warm, seg=seg, reps=reps)
+
+    # --- arm 2: noop tracker (bit-identity gate) -------------------------
+    trk.log_event("arm_start", {"arm": "noop", "rounds": total})
+    noop_tr, noop_rps = timed_arm(model, data, warm=warm, seg=seg,
+                                  reps=reps, tracker="noop")
+    noop_identical = (tree_equal(un_tr.state, noop_tr.state)
+                      and un_tr.history == noop_tr.history)
+
+    # --- arm 3: jsonl tracker (overhead gate) ----------------------------
+    js_dir = os.path.join(run_dir, "jsonl_arm")
+    trk.log_event("arm_start", {"arm": "jsonl", "rounds": total})
+    js_tr, js_rps = timed_arm(model, data, warm=warm, seg=seg, reps=reps,
+                              tracker="jsonl", run_dir=js_dir)
+    js_tr.finish()
+    overhead_pct = 100.0 * (1.0 - js_rps / un_rps)
+    jsonl_identical = tree_equal(un_tr.state, js_tr.state)
+
+    # --- retention gate ---------------------------------------------------
+    ret_dir = os.path.join(run_dir, "retention")
+    ret_tr = FederatedTrainer(model, BASE, rounds_per_call=1, seed=0,
+                              run_dir=ret_dir, checkpoint_every=1,
+                              keep_last=3)
+    ret_tr.run(data, rounds=10, cohort=COHORT, batch=BATCH,
+               meta_batch=BATCH)
+    ret_tr.finish()
+    ck = os.path.join(ret_dir, "checkpoints")
+    blobs = sorted(f for f in os.listdir(ck) if f.endswith(".msgpack"))
+    retention_ok = (len(blobs) == 3
+                    and os.path.exists(os.path.join(ck, "manifest.json"))
+                    and ret_tr.manager.saved_steps() == [8, 9, 10])
+
+    # --- mid-run resume gates (sync + buffered_async) --------------------
+    resume_sync = resume_gate(model, data, BASE,
+                              os.path.join(run_dir, "resume_sync"))
+    resume_async = resume_gate(model, data, ASYNC,
+                               os.path.join(run_dir, "resume_async"))
+
+    gates = {
+        "noop_tracked_run_bit_identical": bool(noop_identical),
+        "jsonl_tracked_run_bit_identical": bool(jsonl_identical),
+        "jsonl_overhead_within_5pct": bool(overhead_pct <= 5.0),
+        "retention_leaves_exactly_keep_last": bool(retention_ok),
+        "resume_latest_bit_identical_sync": bool(resume_sync),
+        "resume_latest_bit_identical_async": bool(resume_async),
+    }
+    report = {
+        "benchmark": "obs_overhead",
+        "config": {"model": "mlp 64-128-10",
+                   "meta_mode": "through_aggregation",
+                   "cohort": COHORT, "batch": BATCH,
+                   "rounds_per_call": ROUNDS_PER_CALL,
+                   "warm_rounds": warm, "timed_segment": seg,
+                   "reps": reps, "fast": bool(args.fast)},
+        "rounds_per_s": {"untracked": round(un_rps, 2),
+                         "noop": round(noop_rps, 2),
+                         "jsonl": round(js_rps, 2)},
+        "jsonl_overhead_pct": round(overhead_pct, 3),
+        "retained_blobs": blobs,
+        "gates": gates,
+        "ok": all(gates.values()),
+    }
+    trk.log_event("bench_report", report)
+    trk.finish()
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    if not report["ok"]:
+        print("obs_overhead: GATE FAILURE", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from common import bench_tracker
 from repro.configs.base import FedConfig
 from repro.core import (init_server_state, make_federated_round,
                         RoundFnCache, server_opt, stack_round_inputs,
@@ -257,11 +258,17 @@ def main():
     ap.add_argument("--fast", action="store_true",
                     help="fewer timed rounds (CI smoke)")
     ap.add_argument("--out", default="BENCH_round_latency.json")
+    ap.add_argument("--run-dir", default=None,
+                    help="jsonl tracker dir (default: "
+                         "benchmarks/runs/round_latency)")
     args = ap.parse_args()
     rounds = 48 if args.fast else 192
+    trk = bench_tracker("round_latency", args.run_dir)
 
     model = make_mlp_model()
+    trk.log_event("arm_start", {"arm": "legacy", "rounds": rounds})
     rps_legacy = run_legacy(model, rounds)
+    trk.log_event("arm_start", {"arm": "fused_scanned", "rounds": rounds})
     rps_fused = run_fused_scanned(model, rounds)
     rel_err = max(numerics_agreement(model, "sgd"),
                   numerics_agreement(model, "sgdm"),
@@ -329,6 +336,8 @@ def main():
         # agree to ~1e-7; the tests gate those at 1e-5)
         "pass_hypergrad_numerics_5e5": bool(hg_rel <= 5e-5),
     }
+    trk.log_event("bench_report", report)
+    trk.finish()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(json.dumps(report, indent=1))

@@ -1,18 +1,23 @@
 """Quickstart: FedMeta w/ UGA on a reduced LM through the plugin API, CPU.
 
-Three registries + one facade (see repro/core/__init__.py):
+The registries + one facade (see repro/core/__init__.py):
 
   * ClientAlgorithm  — what a client computes   (--algorithm uga/fednova/...)
   * CohortExecutor   — how the cohort runs      (vmap / scan / chunked /
                                                  sharded — all registrations
                                                  over one streaming core)
   * ServerEngine     — the server update        (legacy_tree / fused_flat)
+  * MetricsTracker   — where round records go   (noop / console / jsonl /
+                                                 csv / composite)
   * FederatedTrainer — the driver loop          (jit cache, chunking,
                                                  checkpoint/resume, history)
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
+import json
+import os
+import tempfile
 
 import numpy as np
 import jax.numpy as jnp
@@ -87,3 +92,21 @@ rec = FederatedTrainer(model, fed_chunk, seed=0).run(
     data_big, rounds=1, cohort=256, batch=2)[-1]
 print(f"chunked streaming: cohort=256 in 16-client chunks, "
       f"client_loss={rec['client_loss']:.4f}")
+
+# 8. observability (repro.obs, the fifth registry): a jsonl tracker writes
+# every round record + structured events (phase timing spans, run markers)
+# to <run_dir>/metrics.jsonl without touching the numbers — a noop-tracked
+# run is bit-identical to an untracked one (BENCH_obs_overhead.json)
+run_dir = tempfile.mkdtemp(prefix="quickstart-obs-")
+tr = FederatedTrainer(model, fed, seed=0, tracker="jsonl", run_dir=run_dir)
+tr.run(data, rounds=2, cohort=fed.cohort, batch=8, meta_batch=8)
+tr.finish()
+with open(os.path.join(run_dir, "metrics.jsonl")) as f:
+    lines = [json.loads(ln) for ln in f]
+metric_lines = [ln for ln in lines if ln["kind"] == "metrics"]
+phases = {ln["phase"] for ln in lines
+          if ln["kind"] == "event" and ln["event"] == "phase"}
+print(f"jsonl run dir: {len(metric_lines)} metric lines, "
+      f"phases timed: {sorted(phases)}")
+assert [m["client_loss"] for m in metric_lines] \
+    == [h["client_loss"] for h in tr.history]

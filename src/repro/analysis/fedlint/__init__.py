@@ -1,6 +1,6 @@
 """fedlint — the repo-specific static analyzer.
 
-Four passes over the source tree (pure stdlib ``ast``, no jax import, no
+Five passes over the source tree (pure stdlib ``ast``, no jax import, no
 code execution):
 
   ======  ==================================================================
@@ -18,6 +18,8 @@ code execution):
   FL401   host sync (``.item()`` / ``float()`` on tracer) in a traced body
   FL402   host numpy call in a traced body
   FL403   wall-clock read in a traced body
+  FL501   registered engine whose round builder lost its sanitize-guarded
+          ``check_flat_groups`` probe site
   ======  ==================================================================
 
 CLI::

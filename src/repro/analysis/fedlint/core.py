@@ -197,13 +197,15 @@ def load_project(paths: Sequence[str]) -> Tuple[ProjectIndex, List[Finding]]:
 
 
 def run_fedlint(paths: Sequence[str]) -> List[Finding]:
-    """All four passes over ``paths``; returns suppression-filtered
+    """All five passes over ``paths``; returns suppression-filtered
     findings sorted by (path, line, code)."""
     # local imports keep core.py import-cycle-free for the pass modules
     from repro.analysis.fedlint import (jit_rules, kernel_rules,
-                                        registry_rules, rng_rules)
+                                        registry_rules, rng_rules,
+                                        sanitize_rules)
     index, findings = load_project(paths)
-    for mod in (rng_rules, kernel_rules, registry_rules, jit_rules):
+    for mod in (rng_rules, kernel_rules, registry_rules, jit_rules,
+                sanitize_rules):
         findings.extend(mod.check(index))
     by_path = {sf.path: sf for sf in index.files}
     kept = [f for f in findings

@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import restore, save
+from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "CheckpointManager"]

@@ -1,0 +1,230 @@
+"""Managed checkpoint store: background saves, retention, a manifest.
+
+``checkpoint/ckpt.py`` gives one crash-safe blob; a long run needs more —
+saves that don't stall the round loop, old blobs pruned so a 10k-round
+run doesn't hoard disk, and a manifest a fresh process can consult to
+resume (``train.py --resume auto``).  :class:`CheckpointManager` owns a
+directory:
+
+    run_dir/checkpoints/
+      manifest.json            {"steps": [...], "latest": N, ...}
+      step_00000040.msgpack    one atomic ckpt.save blob per retained step
+
+Threading model: :meth:`save` snapshots the (possibly donated) device
+state to host synchronously — ``np.asarray`` per leaf, the only part that
+must happen before the trainer re-dispatches, since the next round's
+donation invalidates the device buffers — then hands serialization +
+manifest + pruning to a single daemon worker.  One worker means writes
+land in submission order and the manifest never goes backwards.  A
+worker failure is re-raised on the next :meth:`save`/:meth:`wait`/
+:meth:`close` rather than dying silently.
+
+Retention: the newest ``keep_last`` saves always survive; steps divisible
+by ``keep_every`` (when > 0) are permanent milestones.  Pruning unlinks
+blob files and rewrites the manifest atomically (tmp + ``os.replace``),
+so a reader never sees a manifest naming a half-deleted blob.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import restore as ckpt_restore
+from repro.checkpoint.ckpt import save as ckpt_save
+
+PyTree = Any
+
+__all__ = ["CheckpointManager"]
+
+_MANIFEST = "manifest.json"
+
+
+def _blob_name(step: int) -> str:
+    return f"step_{step:08d}.msgpack"
+
+
+class CheckpointManager:
+    """Background-thread checkpoint store with retention over one
+    directory.  ``keep_last`` newest saves survive pruning; steps
+    divisible by ``keep_every`` (when > 0) are kept forever."""
+
+    def __init__(self, directory: str, *, keep_last: int = 3,
+                 keep_every: int = 0, background: bool = True):
+        if keep_last < 1:
+            raise ValueError(
+                f"keep_last={keep_last} must be >= 1: retention always "
+                "preserves the newest save (otherwise latest()/resume "
+                "would race the pruner)")
+        if keep_every < 0:
+            raise ValueError(f"keep_every={keep_every} must be >= 0 "
+                             "(0 disables milestone retention)")
+        self.directory = directory
+        self.keep_last = int(keep_last)
+        self.keep_every = int(keep_every)
+        os.makedirs(directory, exist_ok=True)
+        self._manifest = self._read_manifest()
+        self._background = bool(background)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._error: Optional[BaseException] = None
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        if self._background:
+            self._worker = threading.Thread(target=self._drain,
+                                            name="ckpt-manager",
+                                            daemon=True)
+            self._worker.start()
+
+    # ---- public API -------------------------------------------------------
+    def save(self, step: int, tree: PyTree,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot ``tree`` to host NOW (safe against donation: the
+        caller may re-dispatch immediately) and schedule the blob write.
+        ``step`` must be strictly increasing across saves."""
+        self._raise_pending()
+        if self._closed:
+            raise RuntimeError("CheckpointManager is closed; create a new "
+                               "one to keep saving")
+        steps = self._manifest["steps"]
+        if steps and step <= steps[-1]:
+            raise ValueError(
+                f"checkpoint step {step} is not after the last saved step "
+                f"{steps[-1]}; the manager orders blobs by step — resuming "
+                "into an earlier round needs a fresh directory")
+        # np.array(copy=True), not np.asarray: asarray can return a
+        # zero-copy VIEW of the device buffer (CPU jax, numpy leaves) and
+        # the trainer donates that buffer into the next dispatch — the
+        # background writer would then serialize freed/overwritten memory
+        host = jax.tree.map(lambda x: np.array(x, copy=True), tree)
+        if self._background:
+            self._queue.put((step, host, dict(extra or {})))
+        else:
+            self._write(step, host, dict(extra or {}))
+        # manifest mirror is updated eagerly so latest() reflects pending
+        # saves; the on-disk manifest lands when the worker writes the blob
+        steps.append(int(step))
+
+    def latest(self) -> Optional[int]:
+        """Newest saved (or save-pending) step, or None for an empty
+        store.  A fresh process sees the on-disk manifest."""
+        steps = self._manifest["steps"]
+        return steps[-1] if steps else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, _blob_name(step))
+
+    def restore_latest(self, like: PyTree
+                       ) -> Optional[Tuple[PyTree, Dict[str, Any], int]]:
+        """``(tree, extra, step)`` for the newest blob, or None when the
+        store is empty.  Drains pending writes first, so a just-saved
+        step is restorable immediately."""
+        self.wait()
+        step = self.latest()
+        if step is None:
+            return None
+        tree, extra = ckpt_restore(self.path(step), like)
+        return tree, extra, step
+
+    def wait(self) -> None:
+        """Block until every queued save is on disk; re-raise a worker
+        failure."""
+        if self._background:
+            self._queue.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain and stop the worker (idempotent)."""
+        if self._closed:
+            return
+        self.wait()
+        self._closed = True
+        if self._worker is not None:
+            self._queue.put(None)
+            self._worker.join()
+            self._worker = None
+        self._raise_pending()
+
+    def saved_steps(self) -> List[int]:
+        """Steps currently retained on disk (post-pruning view)."""
+        return list(self._read_manifest()["steps"])
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(
+                "a background checkpoint write failed; the round loop "
+                "continued past it, so re-save or treat the run as "
+                f"unresumable from that step ({type(e).__name__}: {e})"
+            ) from e
+
+    # ---- worker side ------------------------------------------------------
+    def _drain(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                self._queue.task_done()
+                return
+            step, host, extra = item
+            try:
+                self._write(step, host, extra)
+            except BaseException as e:  # surfaced on next save/wait/close
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host: PyTree,
+               extra: Dict[str, Any]) -> None:
+        ckpt_save(self.path(step), host, extra=extra)
+        m = self._read_manifest()
+        if step not in m["steps"]:
+            m["steps"] = sorted(m["steps"] + [int(step)])
+        m["latest"] = m["steps"][-1]
+        self._prune(m)
+        self._write_manifest(m)
+
+    def _prune(self, m: Dict[str, Any]) -> None:
+        steps = m["steps"]
+        keep = set(steps[-self.keep_last:])
+        if self.keep_every > 0:
+            keep |= {s for s in steps if s % self.keep_every == 0}
+        for s in steps:
+            if s not in keep:
+                try:
+                    os.remove(self.path(s))
+                except FileNotFoundError:
+                    pass
+        m["steps"] = sorted(keep)
+
+    # ---- manifest ---------------------------------------------------------
+    def _read_manifest(self) -> Dict[str, Any]:
+        p = os.path.join(self.directory, _MANIFEST)
+        if not os.path.exists(p):
+            return {"version": 1, "steps": [], "latest": None,
+                    "keep_last": self.keep_last,
+                    "keep_every": self.keep_every}
+        with open(p, "r", encoding="utf-8") as f:
+            m = json.load(f)
+        m.setdefault("steps", [])
+        return m
+
+    def _write_manifest(self, m: Dict[str, Any]) -> None:
+        m["keep_last"] = self.keep_last
+        m["keep_every"] = self.keep_every
+        p = os.path.join(self.directory, _MANIFEST)
+        tmp = f"{p}.tmp.{os.getpid()}"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(m, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

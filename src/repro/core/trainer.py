@@ -8,10 +8,12 @@ of the full server state, and per-round history assembly — with separate
 ``k == 1`` / ``k > 1`` branches in each copy.  The trainer owns all of it
 once:
 
-    trainer = FederatedTrainer(model, fed, rounds_per_call=4, seed=0)
+    trainer = FederatedTrainer(model, fed, rounds_per_call=4, seed=0,
+                               tracker="jsonl", run_dir="runs/exp0")
     trainer.restore(path)                      # optional resume
     history = trainer.run(data, rounds=100, cohort=8, batch=32)
     trainer.save(path)
+    trainer.finish()
 
 ``run`` samples each chunk from a :class:`~repro.data.pipeline.
 FederatedData`, dispatches one donated program per chunk (metrics sync to
@@ -24,18 +26,34 @@ host once per chunk), and returns one record per round
   * ``on_records(recs, trainer)`` — called after every chunk with that
     chunk's records (eval scheduling, early stopping, custom logging).
 
+Observability (``repro.obs``): every record is fed to the trainer's
+:class:`~repro.obs.MetricsTracker` (``tracker=`` — a registry name,
+instance, or comma list; default ``noop``), each chunk's host phases
+(``sample_stack`` / ``dispatch`` / ``device_sync`` / ``checkpoint``) are
+emitted as ``phase`` events, and ``profile=N`` captures a JAX trace for
+rounds ``[profile_start, profile_start+N)`` into ``run_dir/profile``.
+The legacy ``log_every``/``log_fn`` arguments still work: they compose a
+``console`` tracker into the run's sink.
+
+Managed checkpointing: ``checkpoint_every=N`` (with a ``run_dir``) saves
+the full server state — and the run history, so a resumed run carries its
+curve — every N rounds plus once at run end, through a background
+:class:`~repro.checkpoint.CheckpointManager` with ``keep_last`` /
+``keep_every`` retention; ``resume_latest()`` picks up the newest blob.
+
 Plugin selection (``algorithm`` / ``executor`` / ``engine`` registry names)
 passes through to :func:`repro.core.round.make_federated_round`.
 """
 from __future__ import annotations
 
-import time
+import os
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.checkpoint import restore as ckpt_restore
 from repro.checkpoint import save as ckpt_save
 from repro.configs.base import FedConfig
@@ -45,6 +63,10 @@ from repro.core.round import (RoundFnCache, init_server_state,
 from repro.data.pipeline import FederatedData
 from repro.models.model import Model
 from repro.sim.faults import client_failed_mask, fault_streams, resolve_faults
+
+# NOTE: repro.obs imports live inside methods: obs's tracker registry is
+# built on repro.core.registry, and importing it at module scope from here
+# (repro.core's own __init__ imports the trainer) would be circular.
 
 PyTree = Any
 
@@ -58,6 +80,10 @@ class FederatedTrainer:
                  rounds_per_call: int = 1, donate: bool = True,
                  seed: int = 0, key: Optional[jax.Array] = None,
                  engine: Optional[str] = None, sanitize: bool = False,
+                 tracker=None, run_dir: Optional[str] = None,
+                 checkpoint_every: Optional[int] = None,
+                 keep_last: int = 3, keep_every: int = 0,
+                 profile: int = 0, profile_start: int = 0,
                  **round_kwargs):
         self.model = model
         self.fed = fed
@@ -73,6 +99,25 @@ class FederatedTrainer:
         # client id -> attempts so far, and due round -> ids to re-enqueue
         self._retry_attempts: Dict[int, int] = {}
         self._retry_due: Dict[int, List[int]] = {}
+        # ---- observability ------------------------------------------------
+        from repro.obs.profiler import RoundProfiler
+        from repro.obs.trackers import resolve_tracker
+        self.run_dir = run_dir
+        self.tracker = resolve_tracker(tracker, run_dir=run_dir)
+        self.profiler = RoundProfiler(run_dir, start=profile_start,
+                                      rounds=profile, tracker=self.tracker)
+        self._ckpt_every = checkpoint_every
+        self.manager: Optional[CheckpointManager] = None
+        if checkpoint_every is not None:
+            if run_dir is None:
+                raise ValueError(
+                    "managed checkpointing (checkpoint_every=N) writes "
+                    "under the run directory; pass run_dir= as well, or "
+                    "use save(path) for one-shot checkpoints")
+            self.manager = CheckpointManager(
+                os.path.join(run_dir, "checkpoints"),
+                keep_last=keep_last, keep_every=keep_every)
+        self._last_managed_step: Optional[int] = None
 
     # ---- state management -------------------------------------------------
     @property
@@ -83,30 +128,70 @@ class FederatedTrainer:
     def save(self, path: str, extra: Optional[dict] = None) -> None:
         """Full server state — params, optimizer state (incl. the fused
         engine's tuple-structured flat buffers), the controllable-weights
-        slot when present, and the round counter — so :meth:`restore`
-        continues mid-run without losing FedOpt momentum or meta-learned
-        weights."""
-        ckpt_save(path, self.state, extra=extra or {})
+        slot when present, and the round counter — plus the run history,
+        so :meth:`restore` continues mid-run without losing FedOpt
+        momentum, meta-learned weights, or the metrics curve."""
+        ckpt_save(path, self.state,
+                  extra={**(extra or {}), "history": self.history})
 
     def restore(self, path: str) -> dict:
-        """Resume from a checkpoint written by :meth:`save`; returns the
-        checkpoint's ``extra`` metadata."""
+        """Resume from a checkpoint written by :meth:`save`; restores the
+        run history alongside the server state and returns the
+        checkpoint's ``extra`` metadata (minus the internal history
+        slot)."""
         self.state, extra = ckpt_restore(path, self.state)
+        self.history = list(extra.pop("history", self.history))
         return extra
+
+    def resume_latest(self) -> Optional[int]:
+        """Restore the newest managed checkpoint (``--resume auto``);
+        returns its step, or None when the store is empty/absent."""
+        if self.manager is None:
+            return None
+        hit = self.manager.restore_latest(self.state)
+        if hit is None:
+            return None
+        self.state, extra, step = hit
+        self.history = list(extra.pop("history", self.history))
+        self._last_managed_step = step
+        return step
+
+    def finish(self) -> None:
+        """Flush + close the tracker, profiler, and checkpoint manager
+        (idempotent).  Drivers that own the run call this once at exit;
+        callers that passed a shared tracker instance should close it
+        themselves instead."""
+        self.profiler.close()
+        if self.manager is not None:
+            self.manager.close()
+        self.tracker.finish()
 
     # ---- the driver loop --------------------------------------------------
     def run(self, data: FederatedData, *, rounds: int, cohort: int,
             batch: int, meta_batch: int = 32, share: Optional[bool] = None,
             sample_meta: Optional[Callable] = None,
             on_records: Optional[Callable] = None, log_every: int = 0,
-            log_fn: Callable = print) -> List[Dict[str, float]]:
+            log_fn: Callable = print,
+            tracker=None) -> List[Dict[str, float]]:
         """Train from the current round counter up to ``rounds`` total.
         Returns this call's per-round records (also appended to
-        ``self.history``)."""
+        ``self.history`` and fed to the tracker).  ``tracker=`` overrides
+        the trainer's sink for this call; ``log_every`` composes the
+        classic console line in."""
+        from repro.obs.trackers import (CompositeTracker, ConsoleTracker,
+                                        resolve_tracker, span)
         share = self.fed.share if share is None else share
-        t0 = time.time()
+        trk = self.tracker if tracker is None \
+            else resolve_tracker(tracker, run_dir=self.run_dir)
+        if log_every:
+            trk = CompositeTracker(
+                [trk, ConsoleTracker(every=log_every, log_fn=log_fn)])
         run_history: List[Dict[str, float]] = []
         r = self.round
+        trk.log_event("run_start", {
+            "start_round": r, "rounds": rounds, "final_round": rounds - 1,
+            "cohort": cohort, "batch": batch,
+            "rounds_per_call": self.rounds_per_call})
         faults = resolve_faults(self.fed)
         # degradation policy: with faults on and retry_backoff > 0, clients
         # whose report was lost (crash / drop / past the round deadline) are
@@ -117,16 +202,27 @@ class FederatedTrainer:
                          or faults.deadline > 0))
         while r < rounds:
             k = min(self.rounds_per_call, rounds - r)
-            due = [self._retry_due.pop(r + j, None) if retry_on else None
-                   for j in range(k)]
-            samples = [data.sample_round(r + j, cohort=cohort, batch=batch,
-                                         share=share, include=due[j])
-                       for j in range(k)]
-            metas = [self._sample_meta(sample_meta, data, r + j, meta_batch,
-                                       samples[j])
-                     for j in range(k)]
-            rngs = [round_key(self.key, r + j) for j in range(k)]
-            metrics = self._dispatch(samples, metas, rngs)
+            with span(trk, "sample_stack", round=r, k=k):
+                due = [self._retry_due.pop(r + j, None) if retry_on
+                       else None for j in range(k)]
+                samples = [data.sample_round(r + j, cohort=cohort,
+                                             batch=batch, share=share,
+                                             include=due[j])
+                           for j in range(k)]
+                metas = [self._sample_meta(sample_meta, data, r + j,
+                                           meta_batch, samples[j])
+                         for j in range(k)]
+                rngs = [round_key(self.key, r + j) for j in range(k)]
+                staged = self._stage_inputs(samples, metas, rngs)
+            self.profiler.maybe_start(r)
+            with span(trk, "dispatch", round=r, k=k):
+                metrics = self._dispatch(k, staged)
+            with span(trk, "device_sync", round=r, k=k):
+                # the dispatch span above measures enqueue time only (jax
+                # dispatch is async); this one is the actual device work
+                # left to drain — together they expose the overlap
+                metrics = jax.block_until_ready(metrics)
+            self.profiler.maybe_stop(r + k)
 
             # THE record assembly — every driver shares this one.  Vector
             # metrics (e.g. the async runtime's staleness_hist) become
@@ -142,18 +238,26 @@ class FederatedTrainer:
                 rec["round"] = r + j
                 run_history.append(rec)
                 self.history.append(rec)
-                if log_every and ((r + j) % log_every == 0
-                                  or r + j == rounds - 1):
-                    log_fn(f"[train] round {r + j:4d} " +
-                           " ".join(f"{name}={v:.4f}"
-                                    for name, v in rec.items()
-                                    if name != "round"
-                                    and isinstance(v, float)) +
-                           f" ({time.time() - t0:.1f}s)")
+                trk.log_metrics(r + j, rec)
             if on_records is not None:
                 on_records(recs, self)
             r += k
+            if self.manager is not None and self._ckpt_every \
+                    and (r // self._ckpt_every) > ((r - k)
+                                                   // self._ckpt_every):
+                with span(trk, "checkpoint", round=r - 1):
+                    self._save_managed(r)
+        if self.manager is not None and self._last_managed_step != r:
+            with span(trk, "checkpoint", round=r - 1):
+                self._save_managed(r)
+        trk.log_event("run_finish", {"final_round": rounds - 1,
+                                     "rounds_completed": len(run_history)})
         return run_history
+
+    def _save_managed(self, step: int) -> None:
+        self.manager.save(step, self.state,
+                          extra={"history": self.history})
+        self._last_managed_step = step
 
     def _schedule_retries(self, samples, rngs, recs, due, r, k, faults):
         """Host-side mirror of the jitted round's fault draws: the fold in
@@ -190,19 +294,23 @@ class FederatedTrainer:
         return data.sample_meta(round_idx, meta_batch) if self.fed.meta \
             else None
 
-    def _dispatch(self, samples, metas, rngs) -> Dict[str, jax.Array]:
-        """One donated program for the chunk; metrics come back with a
-        leading K axis for k == 1 too, so record assembly exists once."""
+    def _stage_inputs(self, samples, metas, rngs):
+        """Host-side staging (device transfer for k == 1, the
+        ``stack_round_inputs`` chunk stack for k > 1) — split from
+        dispatch so the ``sample_stack`` phase span covers it."""
         k = len(samples)
         if k == 1:
-            self.state, metrics = self._cache(1)(
-                self.state,
-                jax.tree.map(jnp.asarray, samples[0]["cohort_batch"]),
-                jax.tree.map(jnp.asarray, metas[0]),
-                jnp.asarray(samples[0]["client_weights"]), rngs[0])
-            return {name: v[None] for name, v in metrics.items()}
-        cb, mb, wts, rks = stack_round_inputs(
+            return (jax.tree.map(jnp.asarray, samples[0]["cohort_batch"]),
+                    jax.tree.map(jnp.asarray, metas[0]),
+                    jnp.asarray(samples[0]["client_weights"]), rngs[0])
+        return stack_round_inputs(
             [s["cohort_batch"] for s in samples], metas,
             [s["client_weights"] for s in samples], rngs)
-        self.state, metrics = self._cache(k)(self.state, cb, mb, wts, rks)
+
+    def _dispatch(self, k: int, staged) -> Dict[str, jax.Array]:
+        """One donated program for the chunk; metrics come back with a
+        leading K axis for k == 1 too, so record assembly exists once."""
+        self.state, metrics = self._cache(k)(self.state, *staged)
+        if k == 1:
+            return {name: v[None] for name, v in metrics.items()}
         return metrics

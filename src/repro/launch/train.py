@@ -86,17 +86,29 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  fault_max_delay: int = -1, fault_garble: float = -1.0,
                  fault_garble_scale: float = -1.0,
                  round_deadline: float = 0.0, retry_backoff: int = 0,
-                 sanitize: bool = False):
+                 sanitize: bool = False, tracker: Optional[str] = None,
+                 run_dir: Optional[str] = None, profile: int = 0,
+                 profile_start: int = 0, ckpt_every: int = 0,
+                 keep_last: int = 3, keep_every: int = 0):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
     and metrics sync to host once per K rounds.  ``fused``: flat-buffer
     Pallas server engine (see kernels/fused_update).  ``resume``: path of a
     full-server-state checkpoint written by ``ckpt_path`` — training
-    continues from its round counter toward ``rounds`` total.
+    continues from its round counter toward ``rounds`` total — or
+    ``"auto"``: the newest blob in ``run_dir``'s managed checkpoint store.
     ``sanitize``: debug mode — enables ``jax_debug_nans`` and re-jits the
     round under :mod:`jax.experimental.checkify` with NaN/Inf/OOB checks on
     the flat aggregate buffers (see :mod:`repro.core.sanitize`); slower,
     but a poisoned payload fails the round it appears with an error naming
-    the flat dtype group."""
+    the flat dtype group.
+
+    Observability (``repro.obs``): ``tracker`` is a registry name or comma
+    list (``jsonl,console``) writing under ``run_dir``; ``profile=N``
+    captures a JAX trace for rounds ``[profile_start, profile_start+N)``
+    into ``run_dir/profile``.  With a ``run_dir``, the trainer keeps a
+    managed checkpoint store in ``run_dir/checkpoints`` (a save every
+    ``ckpt_every`` rounds — 0: once at run end — with ``keep_last`` /
+    ``keep_every`` retention)."""
     cfg = get_arch(arch)
     model = build_model(cfg, dtype=dtype, loss_chunk=256)
     fed = FedConfig(
@@ -144,9 +156,23 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     elif executor is not None:
         round_kwargs["executor"] = executor
-    trainer = FederatedTrainer(model, fed, rounds_per_call=rounds_per_call,
-                               seed=seed, sanitize=sanitize, **round_kwargs)
-    if resume:
+    trainer = FederatedTrainer(
+        model, fed, rounds_per_call=rounds_per_call, seed=seed,
+        sanitize=sanitize, tracker=tracker, run_dir=run_dir,
+        checkpoint_every=ckpt_every if run_dir is not None else None,
+        keep_last=keep_last, keep_every=keep_every, profile=profile,
+        profile_start=profile_start, **round_kwargs)
+    if resume == "auto":
+        if run_dir is None:
+            raise ValueError(
+                "--resume auto reads the managed checkpoint store and "
+                "needs --run-dir; pass an explicit checkpoint path "
+                "otherwise")
+        step = trainer.resume_latest()
+        print(f"[train] resume auto: "
+              + (f"round {step} from {run_dir}/checkpoints" if step
+                 is not None else "empty store, starting fresh"))
+    elif resume:
         extra = trainer.restore(resume)
         print(f"[train] resumed {resume} at round {trainer.round} "
               f"(saved by arch={extra.get('arch')})")
@@ -158,6 +184,7 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         trainer.save(ckpt_path, extra={"arch": arch, "rounds": rounds,
                                        "algorithm": algorithm})
         print(f"[train] saved server state to {ckpt_path}")
+    trainer.finish()
     return trainer.state, history
 
 
@@ -245,8 +272,32 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None,
-                    help="checkpoint written by --ckpt to continue from")
+                    help="checkpoint written by --ckpt to continue from, "
+                         "or 'auto': the newest blob in --run-dir's "
+                         "managed store")
     ap.add_argument("--history-out", default=None)
+    from repro.obs import available_trackers
+    ap.add_argument("--tracker", default=None,
+                    help="metrics-tracker registry name or comma list "
+                         f"(repro.obs): {', '.join(available_trackers())}; "
+                         "file trackers write under --run-dir "
+                         "(default: noop)")
+    ap.add_argument("--run-dir", default=None,
+                    help="run directory for tracker files, profiler "
+                         "traces, and the managed checkpoint store")
+    ap.add_argument("--profile", type=int, default=0,
+                    help="capture a jax.profiler trace for N rounds into "
+                         "<run-dir>/profile (0: off)")
+    ap.add_argument("--profile-start", type=int, default=0,
+                    help="first round of the --profile capture window")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="managed-store save period in rounds (needs "
+                         "--run-dir; 0: one save at run end)")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="managed store: newest saves retained")
+    ap.add_argument("--keep-every", type=int, default=0,
+                    help="managed store: steps divisible by N are kept "
+                         "forever (0: off)")
     ap.add_argument("--fused", action="store_true",
                     help="fused flat-buffer Pallas server engine")
     ap.add_argument("--rounds-per-call", type=int, default=1,
@@ -327,7 +378,10 @@ def main():
         fault_garble=args.fault_garble,
         fault_garble_scale=args.fault_garble_scale,
         round_deadline=args.round_deadline,
-        retry_backoff=args.retry_backoff, sanitize=args.sanitize)
+        retry_backoff=args.retry_backoff, sanitize=args.sanitize,
+        tracker=args.tracker, run_dir=args.run_dir, profile=args.profile,
+        profile_start=args.profile_start, ckpt_every=args.ckpt_every,
+        keep_last=args.keep_last, keep_every=args.keep_every)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

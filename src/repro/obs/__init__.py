@@ -1,0 +1,25 @@
+"""Observability subsystem — the fifth plugin registry.
+
+``repro.obs`` is where runs report what happened: pluggable
+:class:`MetricsTracker` sinks for per-round metrics and events
+(``noop`` / ``console`` / ``jsonl`` / ``csv`` / ``composite`` built in,
+:func:`register_tracker` for plugins), host-side phase :func:`span`
+timing, the :class:`RoundProfiler` capturing a JAX trace for a round
+window, and the documented round-metrics schema
+(:func:`round_metric_keys`).  Wired through
+``FederatedTrainer(tracker=..., run_dir=...)`` and
+``train.py --tracker/--run-dir/--profile``.
+"""
+from repro.obs.profiler import RoundProfiler
+from repro.obs.schema import VECTOR_METRICS, round_metric_keys
+from repro.obs.trackers import (CompositeTracker, ConsoleTracker,
+                                CsvTracker, JsonlTracker, MetricsTracker,
+                                NoopTracker, available_trackers,
+                                get_tracker, register_tracker,
+                                resolve_tracker, span)
+
+__all__ = ["MetricsTracker", "NoopTracker", "ConsoleTracker",
+           "JsonlTracker", "CsvTracker", "CompositeTracker",
+           "register_tracker", "get_tracker", "available_trackers",
+           "resolve_tracker", "span", "RoundProfiler",
+           "round_metric_keys", "VECTOR_METRICS"]

@@ -1,0 +1,87 @@
+"""Round-window JAX profiler — the device-side half of ``--profile N``.
+
+:class:`RoundProfiler` captures a ``jax.profiler`` trace for the round
+window ``[start, start + rounds)`` into ``<run_dir>/profile/``.  The
+trainer calls :meth:`maybe_start` before dispatching a chunk and
+:meth:`maybe_stop` after the chunk's device sync; because a chunk spans
+``rounds_per_call`` rounds, the window is widened to chunk boundaries
+(you get at least the rounds you asked for, never fewer).  Start/stop are
+emitted as ``profile_start`` / ``profile_stop`` tracker events so the
+trace window is locatable in the metrics stream.
+
+The capture is the standard XLA profile (``plugins/profile/<ts>/
+*.xplane.pb`` + ``*.trace.json.gz``) viewable in TensorBoard's profile
+plugin or ``chrome://tracing`` / Perfetto after gunzip.  Host-side phase
+timings (sample/stack, dispatch, device-sync, checkpoint) come from the
+tracker ``phase`` events instead — :func:`repro.obs.span` — so the two
+views line up by round index.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.obs.trackers import MetricsTracker, NoopTracker
+
+__all__ = ["RoundProfiler"]
+
+
+class RoundProfiler:
+    """One capture window per run.  Inert when ``rounds <= 0``."""
+
+    def __init__(self, run_dir: Optional[str], *, start: int = 0,
+                 rounds: int = 0,
+                 tracker: Optional[MetricsTracker] = None):
+        if rounds > 0 and run_dir is None:
+            raise ValueError(
+                "profiling writes a trace directory and needs a run "
+                "directory; pass one (FederatedTrainer's run_dir argument "
+                "/ train.py --run-dir)")
+        self.start = int(start)
+        self.rounds = int(rounds)
+        self.trace_dir = (os.path.join(run_dir, "profile")
+                          if run_dir is not None else None)
+        self._tracker = tracker if tracker is not None else NoopTracker()
+        self._active = False
+        self._done = rounds <= 0
+
+    @property
+    def active(self) -> bool:
+        return self._active
+
+    def maybe_start(self, round_idx: int) -> bool:
+        """Open the capture if the chunk starting at ``round_idx`` reaches
+        the window.  Returns True iff the trace is running."""
+        if not self._done and not self._active \
+                and round_idx + 1 > self.start:
+            os.makedirs(self.trace_dir, exist_ok=True)
+            jax.profiler.start_trace(self.trace_dir)
+            self._active = True
+            self._tracker.log_event("profile_start",
+                                    {"round": round_idx,
+                                     "trace_dir": self.trace_dir})
+        return self._active
+
+    def maybe_stop(self, next_round: int) -> None:
+        """Close the capture once the window is fully covered
+        (``next_round`` = first round of the NEXT chunk).  Call after the
+        chunk's device sync so the captured ops actually executed."""
+        if self._active and next_round >= self.start + self.rounds:
+            jax.profiler.stop_trace()
+            self._active = False
+            self._done = True
+            self._tracker.log_event("profile_stop",
+                                    {"round": next_round - 1,
+                                     "trace_dir": self.trace_dir})
+
+    def close(self) -> None:
+        """Abort an open capture (run ended inside the window)."""
+        if self._active:
+            jax.profiler.stop_trace()
+            self._active = False
+            self._done = True
+            self._tracker.log_event("profile_stop",
+                                    {"round": -1,
+                                     "trace_dir": self.trace_dir})

@@ -1,0 +1,346 @@
+"""MetricsTracker — the FIFTH plugin registry: where round metrics go.
+
+Before this subsystem every driver reported progress its own way: the
+trainer had an optional ``log_every`` print, ``train.py --history-out``
+dumped JSON after the fact, and each benchmark hand-rolled its curve
+collection.  A :class:`MetricsTracker` is the one sink they all share:
+
+  * ``log_metrics(round_idx, metrics)`` — one per-round record (the
+    trainer's history dict: plain floats / ints / lists, already
+    host-synced and JSON-serializable);
+  * ``log_event(name, data)`` — out-of-band events: the trainer's
+    ``run_start`` / ``run_finish``, the per-phase wall-clock spans
+    (``phase`` events from :func:`span`: sample/stack, dispatch,
+    device-sync, checkpoint), profiler start/stop, benchmark arm markers;
+  * ``finish()`` — flush + close (idempotent).
+
+Built-ins (registered like algorithms/executors/engines/codecs, through
+the shared :class:`repro.core.registry.Registry`):
+
+  ============  =========================================================
+  ``noop``      drops everything — the default; a noop-tracked run is
+                bit-identical to an untracked one (gated by
+                ``benchmarks/obs_overhead.py``)
+  ``console``   the trainer's classic ``[train] round N k=v ...`` line
+                every ``every`` rounds
+  ``jsonl``     one JSON object per line in ``<run_dir>/metrics.jsonl``
+                (records AND events, distinguished by ``"kind"``)
+  ``csv``       ``<run_dir>/metrics.csv`` with a header pinned to the
+                first record's key set (the schema
+                ``repro.obs.schema.round_metric_keys`` guarantees is
+                stable per config); events go to ``<run_dir>/events.csv``
+  ``composite`` fan-out to several trackers (``resolve_tracker`` builds
+                one from a comma list: ``--tracker jsonl,console``)
+  ============  =========================================================
+
+Register alternatives (a wandb/tensorboard bridge, a socket shipper) with
+:func:`register_tracker`; any registered name is selectable via
+``FederatedTrainer(..., tracker="name")`` and ``train.py --tracker name``.
+"""
+from __future__ import annotations
+
+import contextlib
+import csv as _csv
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence
+
+from repro.core.registry import Registry
+
+__all__ = ["MetricsTracker", "NoopTracker", "ConsoleTracker",
+           "JsonlTracker", "CsvTracker", "CompositeTracker",
+           "register_tracker", "get_tracker", "available_trackers",
+           "resolve_tracker", "span"]
+
+
+class MetricsTracker:
+    """Protocol.  Trackers are constructed per-run via the registry
+    factory ``factory(run_dir=None, **kw) -> MetricsTracker``; file-backed
+    trackers put their artifacts under ``run_dir``."""
+    name: str = "?"
+
+    def log_metrics(self, round_idx: int, metrics: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def log_event(self, name: str, data: Optional[Dict[str, Any]] = None
+                  ) -> None:
+        raise NotImplementedError
+
+    def finish(self) -> None:
+        """Flush and close; must be safe to call more than once."""
+
+
+_TRACKERS = Registry("metrics tracker", "repro.obs.register_tracker")
+
+
+def register_tracker(name: str):
+    """Decorator registering a tracker factory
+    ``factory(run_dir=None, **kw) -> MetricsTracker``."""
+    def deco(factory: Callable) -> Callable:
+        _TRACKERS.register(name, factory)
+        return factory
+    return deco
+
+
+def get_tracker(name: str) -> Callable:
+    return _TRACKERS.get(name)
+
+
+def available_trackers() -> tuple:
+    return _TRACKERS.names()
+
+
+def resolve_tracker(spec, *, run_dir: Optional[str] = None,
+                    **kw) -> "MetricsTracker":
+    """One resolution path for every driver:
+
+      * ``None`` -> the ``noop`` tracker;
+      * a :class:`MetricsTracker` instance -> itself;
+      * a registry name -> ``factory(run_dir=run_dir, **kw)``;
+      * a comma list (``"jsonl,console"``) or a sequence of any of the
+        above -> a :class:`CompositeTracker` over the resolved parts.
+    """
+    if spec is None:
+        return NoopTracker()
+    if isinstance(spec, MetricsTracker):
+        return spec
+    if isinstance(spec, str):
+        if "," in spec:
+            spec = [s.strip() for s in spec.split(",") if s.strip()]
+        else:
+            return get_tracker(spec)(run_dir=run_dir, **kw)
+    if isinstance(spec, (list, tuple)):
+        return CompositeTracker([resolve_tracker(s, run_dir=run_dir, **kw)
+                                 for s in spec])
+    raise ValueError(
+        f"cannot resolve a metrics tracker from {spec!r}; expected None, a "
+        f"MetricsTracker, a registered name {available_trackers()}, a "
+        "comma list of names, or a sequence of those")
+
+
+def _require_run_dir(run_dir: Optional[str], tracker: str, artifact: str
+                     ) -> str:
+    if run_dir is None:
+        raise ValueError(
+            f"the {tracker!r} tracker writes {artifact} and needs a run "
+            "directory; pass one (FederatedTrainer's run_dir argument / "
+            "train.py --run-dir) or use the 'noop'/'console' tracker")
+    os.makedirs(run_dir, exist_ok=True)
+    return run_dir
+
+
+@contextlib.contextmanager
+def span(tracker: MetricsTracker, phase: str, **data):
+    """Wall-clock span emitted as a ``phase`` tracker event — the
+    round-phase profiler's host-side half.  The trainer wraps each chunk's
+    sample/stack, dispatch, device-sync (``block_until_ready``) and
+    checkpoint stages so async-dispatch-vs-compute overlap is visible in
+    the event stream (a long ``device_sync`` next to a short ``dispatch``
+    IS the overlap)."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        tracker.log_event("phase", {"phase": phase,
+                                    "dur_s": time.perf_counter() - t0,
+                                    **data})
+
+
+# ---------------------------------------------------------------------------
+# built-in trackers
+# ---------------------------------------------------------------------------
+@register_tracker("noop")
+class NoopTracker(MetricsTracker):
+    """Drops everything.  The default: an untracked run and a noop-tracked
+    run execute the same jitted programs on the same streams, so they are
+    bit-identical (``benchmarks/obs_overhead.py`` gates it)."""
+    name = "noop"
+
+    def __init__(self, run_dir: Optional[str] = None):
+        del run_dir
+
+    def log_metrics(self, round_idx, metrics):
+        pass
+
+    def log_event(self, name, data=None):
+        pass
+
+    def finish(self):
+        pass
+
+
+@register_tracker("console")
+class ConsoleTracker(MetricsTracker):
+    """The classic trainer progress line, every ``every`` rounds (plus the
+    final round, learned from the trainer's ``run_start`` event)."""
+    name = "console"
+
+    def __init__(self, run_dir: Optional[str] = None, *, every: int = 1,
+                 log_fn: Callable = print):
+        del run_dir
+        self._every = max(int(every), 1)
+        self._log = log_fn
+        self._t0 = time.perf_counter()
+        self._final_round: Optional[int] = None
+
+    def log_metrics(self, round_idx, metrics):
+        if round_idx % self._every and round_idx != self._final_round:
+            return
+        body = " ".join(f"{k}={v:.4f}" for k, v in metrics.items()
+                        if k != "round" and isinstance(v, float))
+        self._log(f"[train] round {round_idx:4d} {body} "
+                  f"({time.perf_counter() - self._t0:.1f}s)")
+
+    def log_event(self, name, data=None):
+        if name == "run_start" and data and "final_round" in data:
+            self._final_round = int(data["final_round"])
+
+    def finish(self):
+        pass
+
+
+class _FileTracker(MetricsTracker):
+    """Shared lazy-open / idempotent-close plumbing for file-backed
+    trackers."""
+
+    def __init__(self):
+        self._closed = False
+
+    def _check_open(self, what: str):
+        if self._closed:
+            raise RuntimeError(
+                f"{self.name} tracker received {what} after finish(); "
+                "trackers are closed once per run — build a new one (or "
+                "delay finish()) for further logging")
+
+    def finish(self):
+        self._closed = True
+
+
+@register_tracker("jsonl")
+class JsonlTracker(_FileTracker):
+    """One JSON object per line in ``<run_dir>/metrics.jsonl``:
+
+        {"kind": "metrics", "round": 3, "client_loss": ..., ...}
+        {"kind": "event", "event": "phase", "t": ..., "phase": "dispatch",
+         "dur_s": ...}
+
+    Append-mode, so a ``--resume`` run extends the same file; ``t`` is a
+    host ``time.time()`` stamp on events.  Flushed on every ``run_finish``
+    event and on :meth:`finish`."""
+    name = "jsonl"
+
+    def __init__(self, run_dir: Optional[str] = None,
+                 filename: str = "metrics.jsonl"):
+        super().__init__()
+        run_dir = _require_run_dir(run_dir, self.name, "metrics.jsonl")
+        self.path = os.path.join(run_dir, filename)
+        self._fh = open(self.path, "a", encoding="utf-8")
+
+    def log_metrics(self, round_idx, metrics):
+        self._check_open("a metrics record")
+        rec = {"kind": "metrics", "round": int(round_idx)}
+        rec.update((k, v) for k, v in metrics.items() if k != "round")
+        self._fh.write(json.dumps(rec) + "\n")
+
+    def log_event(self, name, data=None):
+        self._check_open("an event")
+        rec = {"kind": "event", "event": name, "t": time.time()}
+        rec.update(data or {})
+        self._fh.write(json.dumps(rec) + "\n")
+        if name == "run_finish":
+            self._fh.flush()
+
+    def finish(self):
+        if not self._closed:
+            self._fh.flush()
+            self._fh.close()
+        super().finish()
+
+
+@register_tracker("csv")
+class CsvTracker(_FileTracker):
+    """``<run_dir>/metrics.csv`` — header pinned to the FIRST record's
+    sorted key set.  A record with different keys raises (per-config the
+    round metrics schema is stable — ``repro.obs.schema`` documents and
+    ``tests/test_metrics_schema.py`` pins it — so drift here means a
+    driver mixed configs into one file).  Vector metrics (e.g.
+    ``staleness_hist``) are JSON-encoded in their cell.  Events land in
+    ``<run_dir>/events.csv`` as ``(t, event, json_payload)``."""
+    name = "csv"
+
+    def __init__(self, run_dir: Optional[str] = None,
+                 filename: str = "metrics.csv"):
+        super().__init__()
+        run_dir = _require_run_dir(run_dir, self.name, "metrics.csv")
+        self.path = os.path.join(run_dir, filename)
+        self.events_path = os.path.join(run_dir, "events.csv")
+        self._fh = open(self.path, "w", newline="", encoding="utf-8")
+        self._writer = _csv.writer(self._fh)
+        self._header: Optional[Sequence[str]] = None
+        self._efh = None
+
+    def log_metrics(self, round_idx, metrics):
+        self._check_open("a metrics record")
+        rec = {"round": int(round_idx),
+               **{k: v for k, v in metrics.items() if k != "round"}}
+        if self._header is None:
+            self._header = ["round"] + sorted(k for k in rec if k != "round")
+            self._writer.writerow(self._header)
+        missing = set(self._header) - set(rec)
+        extra = set(rec) - set(self._header)
+        if missing or extra:
+            raise ValueError(
+                f"csv tracker header is pinned to the first record's keys "
+                f"{list(self._header)} but this record differs "
+                f"(missing: {sorted(missing)}, new: {sorted(extra)}); "
+                "per-config round metrics are schema-stable "
+                "(repro.obs.schema) — use one tracker per config, or the "
+                "jsonl tracker for mixed streams")
+        self._writer.writerow(
+            [json.dumps(rec[k]) if isinstance(rec[k], (list, tuple))
+             else rec[k] for k in self._header])
+
+    def log_event(self, name, data=None):
+        self._check_open("an event")
+        if self._efh is None:
+            self._efh = open(self.events_path, "w", newline="",
+                             encoding="utf-8")
+            self._ewriter = _csv.writer(self._efh)
+            self._ewriter.writerow(["t", "event", "data"])
+        self._ewriter.writerow([time.time(), name, json.dumps(data or {})])
+
+    def finish(self):
+        if not self._closed:
+            self._fh.flush()
+            self._fh.close()
+            if self._efh is not None:
+                self._efh.flush()
+                self._efh.close()
+        super().finish()
+
+
+@register_tracker("composite")
+class CompositeTracker(MetricsTracker):
+    """Fan-out to several trackers (``resolve_tracker("jsonl,console")``).
+    ``finish`` closes every child; children added by the trainer's
+    ``log_every`` back-compat path are owned by the run that built them."""
+    name = "composite"
+
+    def __init__(self, trackers: Iterable[MetricsTracker] = (),
+                 run_dir: Optional[str] = None):
+        del run_dir
+        self.trackers = list(trackers)
+
+    def log_metrics(self, round_idx, metrics):
+        for t in self.trackers:
+            t.log_metrics(round_idx, metrics)
+
+    def log_event(self, name, data=None):
+        for t in self.trackers:
+            t.log_event(name, data)
+
+    def finish(self):
+        for t in self.trackers:
+            t.finish()

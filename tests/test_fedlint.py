@@ -375,6 +375,124 @@ def test_jit_rules_good_host_code_untouched(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# FL501 — sanitize-probe coverage
+# ---------------------------------------------------------------------------
+_FULL_ENGINE = """\
+    from engines import register_engine
+
+    @register_engine("full")
+    class FullEngine:
+        accepts = ("delta",)
+        preferred = "delta"
+        meta_capabilities = ("none",)
+        codec_capabilities = ("identity",)
+        is_async = False
+"""
+
+
+def test_fl501_builder_lost_its_probe(tmp_path):
+    found = run_on(tmp_path, {
+        "engine.py": _FULL_ENGINE,
+        "round.py": """\
+            def make_federated_round(model, fed, sanitize=False):
+                def one_round(state, batch):
+                    return state, {}
+                return one_round
+        """})
+    assert codes(found) == ["FL501"]
+    msg = found[0].message
+    assert "make_federated_round" in msg and "check_flat_groups" in msg
+
+
+def test_fl501_good_guarded_probe_in_builder(tmp_path):
+    found = run_on(tmp_path, {
+        "engine.py": _FULL_ENGINE,
+        "round.py": """\
+            from sanitize import check_flat_groups
+
+            def make_federated_round(model, fed, sanitize=False):
+                def one_round(state, batch):
+                    if sanitize:
+                        check_flat_groups(None, state, "post-round params")
+                    return state, {}
+                return one_round
+        """})
+    assert found == []
+
+
+def test_fl501_async_engine_checks_make_async_tick(tmp_path):
+    found = run_on(tmp_path, {
+        "engine.py": """\
+            from engines import register_engine
+
+            @register_engine("buffered")
+            class BufferedEngine:
+                accepts = ("delta",)
+                preferred = "delta"
+                meta_capabilities = ("none",)
+                codec_capabilities = ("identity",)
+                is_async = True
+        """,
+        "async_round.py": """\
+            def make_async_tick(model, fed, sanitize=False):
+                def one_tick(state, batch):
+                    return state, {}
+                return one_tick
+        """,
+        # the SYNC builder has its probe; the async engine must not be
+        # considered covered by it
+        "round.py": """\
+            from sanitize import check_flat_groups
+
+            def make_federated_round(model, fed, sanitize=False):
+                def one_round(state, batch):
+                    if sanitize:
+                        check_flat_groups(None, state, "post-round params")
+                    return state, {}
+                return one_round
+        """})
+    assert codes(found) == ["FL501"]
+    assert "make_async_tick" in found[0].message
+
+
+def test_fl501_good_class_local_probe(tmp_path):
+    # an engine may carry its own guarded probe (e.g. inside apply())
+    # instead of relying on the builder's
+    found = run_on(tmp_path, {
+        "engine.py": """\
+            from engines import register_engine
+            from sanitize import check_flat_groups
+
+            @register_engine("careful")
+            class CarefulEngine:
+                accepts = ("delta",)
+                preferred = "delta"
+                meta_capabilities = ("none",)
+                codec_capabilities = ("identity",)
+                is_async = False
+
+                def apply(self, params, handle, opt, lr, sanitize=False):
+                    if sanitize:
+                        check_flat_groups(None, handle, "engine apply")
+                    return params, opt, 0.0
+        """,
+        "round.py": """\
+            def make_federated_round(model, fed, sanitize=False):
+                def one_round(state, batch):
+                    return state, {}
+                return one_round
+        """})
+    assert found == []
+
+
+def test_fl501_silent_without_builder_in_tree(tmp_path):
+    # single-file plugin snippets never carry the builder: no finding
+    # (under-approximation — also keeps the FL301 fixtures clean)
+    found = run_on(tmp_path, {"engine.py": _FULL_ENGINE})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
 # suppressions, output format, CLI exit codes
 # ---------------------------------------------------------------------------
 def test_suppression_comment_drops_finding(tmp_path):

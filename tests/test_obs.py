@@ -1,0 +1,368 @@
+"""Observability subsystem (PR 9): tracker registry, phase spans, the
+round profiler, the managed checkpoint store, and their trainer wiring.
+
+  * tracker registry: the five built-ins, ``register_tracker`` plugins,
+    ``resolve_tracker`` over names / instances / comma lists, actionable
+    errors for unknown names and missing run dirs;
+  * jsonl/csv round-trip, csv pinned-header enforcement, composite
+    fan-out, post-finish logging rejected;
+  * trainer integration: every record reaches the tracker, run_start /
+    run_finish / phase events bracket it, a noop-tracked run is
+    bit-identical to an untracked one, ``--profile``-style capture
+    writes a trace directory;
+  * history persistence (the PR 9 bugfix): ``save``/``restore`` carries
+    ``trainer.history``, and a resumed run's history + state are
+    bit-identical to never stopping — sync and ``buffered_async``;
+  * CheckpointManager: retention leaves exactly ``keep_last`` blobs (+
+    ``keep_every`` milestones), restore_latest round-trips, manifests
+    survive process-fresh reads, non-monotonic steps and worker errors
+    are loud.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import FedConfig
+from repro.core import FederatedTrainer
+from repro.data.pipeline import FederatedData
+from repro.models.model import Model
+from repro.obs import (CompositeTracker, JsonlTracker, MetricsTracker,
+                       NoopTracker, available_trackers, get_tracker,
+                       register_tracker, resolve_tracker, span)
+
+COHORT, BATCH = 4, 16
+
+
+def make_mlp_model(d=10, h=16, classes=4):
+    def init(k):
+        k1, k2 = jax.random.split(k)
+        return {"w1": jax.random.normal(k1, (d, h)) * 0.3,
+                "w2": jax.random.normal(k2, (h, classes)) * 0.3}
+
+    def loss(w, batch, rng=None):
+        logits = jnp.tanh(batch["x"] @ w["w1"]) @ w["w2"]
+        l = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["y"][:, None], 1))
+        return l, {}
+
+    return Model(name="mlp", init=init, loss=loss)
+
+
+def _toy_fed_data(n=256, clients=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 10)).astype(np.float32)
+    y = rng.integers(0, 4, n).astype(np.int32)
+    parts = np.array_split(rng.permutation(n), clients)
+    meta = rng.choice(n, 32, replace=False)
+    return FederatedData(arrays={"x": x, "y": y}, client_indices=parts,
+                         meta_indices=meta, seed=seed)
+
+
+BASE = FedConfig(algorithm="uga", meta=True, cohort=COHORT, local_steps=2,
+                 client_lr=0.05, server_lr=0.1, meta_lr=0.05,
+                 clip_norm=1.0, fused_update=True)
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def read_jsonl(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f]
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+def test_builtin_trackers_registered():
+    assert {"noop", "console", "jsonl", "csv",
+            "composite"} <= set(available_trackers())
+
+
+def test_unknown_tracker_is_actionable():
+    with pytest.raises(ValueError, match="metrics tracker.*jsonl"):
+        get_tracker("wandb")
+
+
+def test_register_tracker_plugin_and_resolution(tmp_path):
+    seen = []
+
+    @register_tracker("obs_test_memory")
+    class MemoryTracker(MetricsTracker):
+        name = "obs_test_memory"
+
+        def __init__(self, run_dir=None):
+            pass
+
+        def log_metrics(self, r, m):
+            seen.append((r, m))
+
+        def log_event(self, name, data=None):
+            pass
+
+        def finish(self):
+            pass
+
+    t = resolve_tracker("obs_test_memory")
+    t.log_metrics(0, {"x": 1.0})
+    assert seen == [(0, {"x": 1.0})]
+    # comma list -> composite; instance passthrough; None -> noop
+    combo = resolve_tracker("obs_test_memory,noop", run_dir=str(tmp_path))
+    assert isinstance(combo, CompositeTracker)
+    assert resolve_tracker(t) is t
+    assert isinstance(resolve_tracker(None), NoopTracker)
+
+
+def test_file_tracker_requires_run_dir():
+    with pytest.raises(ValueError, match="run "):
+        resolve_tracker("jsonl")
+    with pytest.raises(ValueError, match="run "):
+        resolve_tracker("csv")
+
+
+# ---------------------------------------------------------------------------
+# jsonl / csv / span behavior
+# ---------------------------------------------------------------------------
+def test_jsonl_records_events_and_span(tmp_path):
+    t = resolve_tracker("jsonl", run_dir=str(tmp_path))
+    t.log_metrics(0, {"round": 0, "client_loss": 1.5,
+                      "staleness_hist": [1.0, 2.0]})
+    with span(t, "dispatch", round=0):
+        pass
+    t.finish()
+    lines = read_jsonl(tmp_path / "metrics.jsonl")
+    assert lines[0] == {"kind": "metrics", "round": 0, "client_loss": 1.5,
+                        "staleness_hist": [1.0, 2.0]}
+    assert lines[1]["kind"] == "event" and lines[1]["event"] == "phase"
+    assert lines[1]["phase"] == "dispatch" and lines[1]["dur_s"] >= 0
+    with pytest.raises(RuntimeError, match="finish"):
+        t.log_metrics(1, {"x": 1.0})
+    t.finish()  # idempotent
+
+
+def test_csv_header_pinned_to_first_record(tmp_path):
+    t = resolve_tracker("csv", run_dir=str(tmp_path))
+    t.log_metrics(0, {"round": 0, "b": 1.0, "a": 2.0})
+    t.log_metrics(1, {"round": 1, "b": 3.0, "a": 4.0})
+    with pytest.raises(ValueError, match="pinned"):
+        t.log_metrics(2, {"round": 2, "b": 1.0, "c": 9.0})
+    t.log_event("run_finish", {})
+    t.finish()
+    rows = (tmp_path / "metrics.csv").read_text().strip().splitlines()
+    assert rows[0] == "round,a,b"
+    assert rows[1] == "0,2.0,1.0"
+    assert (tmp_path / "events.csv").exists()
+
+
+def test_console_tracker_prints_every_and_final(capsys):
+    t = resolve_tracker("console")
+    t.log_event("run_start", {"final_round": 3})
+    for r in range(4):
+        t.log_metrics(r, {"round": r, "client_loss": float(r)})
+    out = capsys.readouterr().out
+    # every=1 default: all rounds printed, floats formatted
+    assert out.count("[train] round") == 4
+    assert "client_loss=2.0000" in out
+
+
+# ---------------------------------------------------------------------------
+# trainer wiring
+# ---------------------------------------------------------------------------
+def test_trainer_feeds_tracker_and_events(tmp_path):
+    model, data = make_mlp_model(), _toy_fed_data()
+    tr = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0,
+                          tracker="jsonl", run_dir=str(tmp_path))
+    hist = tr.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=8)
+    tr.finish()
+    lines = read_jsonl(tmp_path / "metrics.jsonl")
+    events = [ln["event"] for ln in lines if ln["kind"] == "event"]
+    metrics = [ln for ln in lines if ln["kind"] == "metrics"]
+    assert events[0] == "run_start" and events[-1] == "run_finish"
+    assert {"sample_stack", "dispatch", "device_sync"} <= {
+        ln.get("phase") for ln in lines if ln.get("event") == "phase"}
+    assert [m["round"] for m in metrics] == [0, 1, 2, 3]
+    # jsonl record content == returned history record
+    assert metrics[0]["client_loss"] == hist[0]["client_loss"]
+
+
+def test_noop_tracked_run_bit_identical_to_untracked():
+    model, data = make_mlp_model(), _toy_fed_data()
+    a = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0)
+    b = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0,
+                         tracker="noop")
+    ha = a.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=8)
+    hb = b.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=8)
+    assert tree_equal(a.state, b.state)
+    assert ha == hb
+
+
+def test_profiler_writes_trace_window(tmp_path):
+    model, data = make_mlp_model(), _toy_fed_data()
+    tr = FederatedTrainer(model, BASE, seed=0, tracker="jsonl",
+                          run_dir=str(tmp_path), profile=1,
+                          profile_start=1)
+    tr.run(data, rounds=3, cohort=COHORT, batch=BATCH, meta_batch=8)
+    tr.finish()
+    trace_root = tmp_path / "profile"
+    assert trace_root.is_dir()
+    assert any(f.endswith(".xplane.pb")
+               for _, _, fs in os.walk(trace_root) for f in fs)
+    events = [ln for ln in read_jsonl(tmp_path / "metrics.jsonl")
+              if ln["kind"] == "event"]
+    starts = [e for e in events if e["event"] == "profile_start"]
+    stops = [e for e in events if e["event"] == "profile_stop"]
+    assert len(starts) == 1 and len(stops) == 1
+
+
+def test_profile_without_run_dir_is_actionable():
+    model = make_mlp_model()
+    with pytest.raises(ValueError, match="run "):
+        FederatedTrainer(model, BASE, seed=0, profile=2)
+
+
+# ---------------------------------------------------------------------------
+# history persistence (the PR 9 bugfix) + manager resume
+# ---------------------------------------------------------------------------
+def test_save_restore_carries_history_and_extra(tmp_path):
+    model, data = make_mlp_model(), _toy_fed_data()
+    path = str(tmp_path / "ck.msgpack")
+    tr = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0)
+    full = tr.run(data, rounds=6, cohort=COHORT, batch=BATCH, meta_batch=8)
+
+    half = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0)
+    half.run(data, rounds=2, cohort=COHORT, batch=BATCH, meta_batch=8)
+    half.save(path, extra={"arch": "mlp"})
+
+    resumed = FederatedTrainer(model, BASE, rounds_per_call=2, seed=0)
+    extra = resumed.restore(path)
+    assert extra == {"arch": "mlp"}          # history slot is internal
+    assert resumed.history == full[:2]       # the bug: this was [] before
+    tail = resumed.run(data, rounds=6, cohort=COHORT, batch=BATCH,
+                       meta_batch=8)
+    assert tail == full[2:]                  # run() returns this call only
+    assert resumed.history == full           # ...while history is complete
+    assert tree_equal(resumed.state, tr.state)
+
+
+@pytest.mark.parametrize("engine", [None, "buffered_async"],
+                         ids=["sync", "buffered_async"])
+def test_manager_resume_bit_identical_midrun(tmp_path, engine):
+    fed = BASE if engine is None else dataclasses.replace(
+        BASE, cohort_strategy="scan", engine="buffered_async",
+        async_buffer=COHORT // 2, async_capacity=2 * COHORT,
+        fault_profile="stragglers")
+    model, data = make_mlp_model(), _toy_fed_data()
+    rd = str(tmp_path / "run")
+    tr = FederatedTrainer(model, fed, rounds_per_call=2, seed=0,
+                          run_dir=rd, checkpoint_every=2, keep_last=2)
+    tr.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=8)
+    tr.finish()
+
+    # fresh process stand-in: a new trainer over the same run dir
+    tr2 = FederatedTrainer(model, fed, rounds_per_call=2, seed=0,
+                           run_dir=rd, checkpoint_every=2, keep_last=2)
+    step = tr2.resume_latest()
+    assert step == 4 and tr2.round == 4 and len(tr2.history) == 4
+    tr2.run(data, rounds=8, cohort=COHORT, batch=BATCH, meta_batch=8)
+    tr2.finish()
+
+    straight = FederatedTrainer(model, fed, rounds_per_call=2, seed=0)
+    straight.run(data, rounds=8, cohort=COHORT, batch=BATCH, meta_batch=8)
+    assert tree_equal(tr2.state, straight.state)
+    assert tr2.history == straight.history
+
+
+def test_trainer_checkpoint_every_requires_run_dir():
+    model = make_mlp_model()
+    with pytest.raises(ValueError, match="run_dir"):
+        FederatedTrainer(model, BASE, seed=0, checkpoint_every=2)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager retention + failure modes
+# ---------------------------------------------------------------------------
+def test_manager_retention_exactly_keep_last(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=3)
+    for s in range(1, 11):
+        m.save(s, {"a": np.full((4,), float(s))})
+    m.close()
+    blobs = sorted(f for f in os.listdir(tmp_path) if f.endswith(".msgpack"))
+    assert blobs == ["step_00000008.msgpack", "step_00000009.msgpack",
+                     "step_00000010.msgpack"]
+    assert m.saved_steps() == [8, 9, 10]
+
+
+def test_manager_keep_every_milestones_survive(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=2, keep_every=5)
+    for s in range(1, 13):
+        m.save(s, {"a": np.full((2,), float(s))})
+    m.close()
+    assert m.saved_steps() == [5, 10, 11, 12]
+
+
+def test_manager_restore_latest_and_fresh_process(tmp_path):
+    like = {"a": np.zeros((3,))}
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    m.save(3, {"a": np.full((3,), 3.0)}, extra={"tag": "x"})
+    m.save(7, {"a": np.full((3,), 7.0)}, extra={"tag": "y"})
+    m.close()
+    # a fresh manager (new process) reads the on-disk manifest
+    m2 = CheckpointManager(str(tmp_path), keep_last=2)
+    assert m2.latest() == 7
+    tree, extra, step = m2.restore_latest(like)
+    assert step == 7 and extra == {"tag": "y"}
+    np.testing.assert_array_equal(tree["a"], np.full((3,), 7.0))
+    assert m2.restore_latest(like) is not None
+    m2.close()
+    empty = CheckpointManager(str(tmp_path / "fresh"), keep_last=2)
+    assert empty.latest() is None and empty.restore_latest(like) is None
+    empty.close()
+
+
+def test_manager_rejects_non_monotonic_steps(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    m.save(5, {"a": np.zeros((2,))})
+    with pytest.raises(ValueError, match="after the last saved step"):
+        m.save(5, {"a": np.zeros((2,))})
+    with pytest.raises(ValueError, match="after the last saved step"):
+        m.save(3, {"a": np.zeros((2,))})
+    m.close()
+
+
+def test_manager_surfaces_worker_errors(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    # a directory squatting on the blob path makes the atomic rename fail
+    os.makedirs(m.path(1))
+    m.save(1, {"a": np.zeros((2,))})
+    with pytest.raises(RuntimeError, match="background checkpoint write"):
+        m.wait()
+
+
+def test_manager_guards_bad_retention_config(tmp_path):
+    with pytest.raises(ValueError, match="keep_last"):
+        CheckpointManager(str(tmp_path), keep_last=0)
+    with pytest.raises(ValueError, match="keep_every"):
+        CheckpointManager(str(tmp_path), keep_every=-1)
+
+
+def test_manager_donation_safe_snapshot(tmp_path):
+    """save() must host-copy before returning: mutating (or donating) the
+    device buffer afterwards must not corrupt the pending blob."""
+    m = CheckpointManager(str(tmp_path), keep_last=1)
+    arr = np.arange(4.0)
+    m.save(1, {"a": arr})
+    arr += 100.0                   # caller reuses the buffer immediately
+    m.wait()
+    tree, _, _ = m.restore_latest({"a": np.zeros((4,))})
+    np.testing.assert_array_equal(tree["a"], np.arange(4.0))
+    m.close()
