@@ -11,21 +11,27 @@ directory:
       step_00000040.msgpack    one atomic ckpt.save blob per retained step
 
 Threading model: :meth:`save` snapshots the (possibly donated) device
-state to host synchronously — ``np.asarray`` per leaf, the only part that
-must happen before the trainer re-dispatches, since the next round's
-donation invalidates the device buffers — then hands serialization +
+state to host synchronously — ``np.array(copy=True)`` per leaf plus a
+deep copy of ``extra``, the only parts that must happen before the
+trainer re-dispatches, since the next round's donation invalidates the
+device buffers and the caller keeps mutating live containers (e.g. the
+trainer's growing ``history`` list) — then hands serialization +
 manifest + pruning to a single daemon worker.  One worker means writes
 land in submission order and the manifest never goes backwards.  A
 worker failure is re-raised on the next :meth:`save`/:meth:`wait`/
-:meth:`close` rather than dying silently.
+:meth:`close` rather than dying silently, and the failed step is dropped
+from the in-memory index so ``latest()`` never points at a blob that was
+never written and the same step can be re-saved.
 
 Retention: the newest ``keep_last`` saves always survive; steps divisible
-by ``keep_every`` (when > 0) are permanent milestones.  Pruning unlinks
-blob files and rewrites the manifest atomically (tmp + ``os.replace``),
-so a reader never sees a manifest naming a half-deleted blob.
+by ``keep_every`` (when > 0) are permanent milestones.  Pruning rewrites
+the manifest atomically (tmp + ``os.replace``) with the survivors FIRST,
+then unlinks the dropped blob files, so a reader never sees a manifest
+naming a half-deleted blob.
 """
 from __future__ import annotations
 
+import copy
 import json
 import os
 import queue
@@ -71,7 +77,9 @@ class CheckpointManager:
         self._manifest = self._read_manifest()
         self._background = bool(background)
         self._queue: "queue.Queue" = queue.Queue()
-        self._error: Optional[BaseException] = None
+        # (step, exception) of a failed background write, surfaced on the
+        # next save()/wait()/close()
+        self._error: Optional[Tuple[int, BaseException]] = None
         self._worker: Optional[threading.Thread] = None
         self._closed = False
         if self._background:
@@ -101,10 +109,15 @@ class CheckpointManager:
         # the trainer donates that buffer into the next dispatch — the
         # background writer would then serialize freed/overwritten memory
         host = jax.tree.map(lambda x: np.array(x, copy=True), tree)
+        # deep copy, not dict(): a shallow copy still aliases nested
+        # containers the caller keeps mutating (the trainer passes its live
+        # history list) — the worker would serialize rows appended AFTER
+        # this save, and a resume would replay/duplicate them
+        snapshot = copy.deepcopy(extra) if extra else {}
         if self._background:
-            self._queue.put((step, host, dict(extra or {})))
+            self._queue.put((step, host, snapshot))
         else:
-            self._write(step, host, dict(extra or {}))
+            self._write(step, host, snapshot)
         # manifest mirror is updated eagerly so latest() reflects pending
         # saves; the on-disk manifest lands when the worker writes the blob
         steps.append(int(step))
@@ -155,11 +168,13 @@ class CheckpointManager:
 
     def _raise_pending(self) -> None:
         if self._error is not None:
-            e, self._error = self._error, None
+            (step, e), self._error = self._error, None
             raise RuntimeError(
-                "a background checkpoint write failed; the round loop "
-                "continued past it, so re-save or treat the run as "
-                f"unresumable from that step ({type(e).__name__}: {e})"
+                f"a background checkpoint write failed for step {step}; "
+                "the round loop continued past it, and the step was dropped "
+                "from the store (latest() now names the newest blob actually "
+                "on disk) — save that step again, or treat the run as "
+                f"unresumable from it ({type(e).__name__}: {e})"
             ) from e
 
     # ---- worker side ------------------------------------------------------
@@ -173,7 +188,16 @@ class CheckpointManager:
             try:
                 self._write(step, host, extra)
             except BaseException as e:  # surfaced on next save/wait/close
-                self._error = e
+                self._error = (step, e)
+                # drop the phantom from the eager mirror: the blob never
+                # landed, so latest()/restore_latest() must not name it and
+                # the monotonicity check must allow re-saving the step
+                # (list ops are atomic under the GIL, so this is safe
+                # against the main thread's append)
+                try:
+                    self._manifest["steps"].remove(step)
+                except ValueError:
+                    pass
             finally:
                 self._queue.task_done()
 
@@ -184,21 +208,26 @@ class CheckpointManager:
         if step not in m["steps"]:
             m["steps"] = sorted(m["steps"] + [int(step)])
         m["latest"] = m["steps"][-1]
-        self._prune(m)
+        # manifest first, unlink second: a crash (or concurrent reader)
+        # between the two sees a manifest whose every named blob exists
+        dropped = self._prune_manifest(m)
         self._write_manifest(m)
+        for s in dropped:
+            try:
+                os.remove(self.path(s))
+            except FileNotFoundError:
+                pass
 
-    def _prune(self, m: Dict[str, Any]) -> None:
+    def _prune_manifest(self, m: Dict[str, Any]) -> List[int]:
+        """Shrink ``m["steps"]`` to the retention set; return the dropped
+        steps (whose blobs the caller unlinks AFTER the manifest lands)."""
         steps = m["steps"]
         keep = set(steps[-self.keep_last:])
         if self.keep_every > 0:
             keep |= {s for s in steps if s % self.keep_every == 0}
-        for s in steps:
-            if s not in keep:
-                try:
-                    os.remove(self.path(s))
-                except FileNotFoundError:
-                    pass
+        dropped = [s for s in steps if s not in keep]
         m["steps"] = sorted(keep)
+        return dropped
 
     # ---- manifest ---------------------------------------------------------
     def _read_manifest(self) -> Dict[str, Any]:

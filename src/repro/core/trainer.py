@@ -179,13 +179,33 @@ class FederatedTrainer:
         the trainer's sink for this call; ``log_every`` composes the
         classic console line in."""
         from repro.obs.trackers import (CompositeTracker, ConsoleTracker,
-                                        resolve_tracker, span)
+                                        resolve_tracker)
         share = self.fed.share if share is None else share
+        # trackers THIS call constructs (registry-resolved overrides, the
+        # log_every console) are finished before returning so their buffers
+        # flush; self.tracker and caller-passed instances outlive the call
+        owned: List[Any] = []
         trk = self.tracker if tracker is None \
-            else resolve_tracker(tracker, run_dir=self.run_dir)
+            else resolve_tracker(tracker, run_dir=self.run_dir, owned=owned)
         if log_every:
-            trk = CompositeTracker(
-                [trk, ConsoleTracker(every=log_every, log_fn=log_fn)])
+            console = ConsoleTracker(every=log_every, log_fn=log_fn)
+            owned.append(console)
+            trk = CompositeTracker([trk, console])
+        try:
+            return self._run_tracked(
+                data, trk, rounds=rounds, cohort=cohort, batch=batch,
+                meta_batch=meta_batch, share=share, sample_meta=sample_meta,
+                on_records=on_records)
+        finally:
+            for t in owned:
+                t.finish()
+
+    def _run_tracked(self, data: FederatedData, trk, *, rounds: int,
+                     cohort: int, batch: int, meta_batch: int, share: bool,
+                     sample_meta: Optional[Callable],
+                     on_records: Optional[Callable]
+                     ) -> List[Dict[str, float]]:
+        from repro.obs.trackers import span
         run_history: List[Dict[str, float]] = []
         r = self.round
         trk.log_event("run_start", {
@@ -214,7 +234,7 @@ class FederatedTrainer:
                          for j in range(k)]
                 rngs = [round_key(self.key, r + j) for j in range(k)]
                 staged = self._stage_inputs(samples, metas, rngs)
-            self.profiler.maybe_start(r)
+            self.profiler.maybe_start(r, k)
             with span(trk, "dispatch", round=r, k=k):
                 metrics = self._dispatch(k, staged)
             with span(trk, "device_sync", round=r, k=k):

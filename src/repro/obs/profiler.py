@@ -51,11 +51,14 @@ class RoundProfiler:
     def active(self) -> bool:
         return self._active
 
-    def maybe_start(self, round_idx: int) -> bool:
-        """Open the capture if the chunk starting at ``round_idx`` reaches
-        the window.  Returns True iff the trace is running."""
+    def maybe_start(self, round_idx: int, k: int = 1) -> bool:
+        """Open the capture if the chunk ``[round_idx, round_idx + k)``
+        overlaps the window — ``k`` is the chunk length, so a window
+        starting mid-chunk still opens on the chunk that contains it
+        (the widening the class docstring promises).  Returns True iff
+        the trace is running."""
         if not self._done and not self._active \
-                and round_idx + 1 > self.start:
+                and round_idx + k > self.start:
             os.makedirs(self.trace_dir, exist_ok=True)
             jax.profiler.start_trace(self.trace_dir)
             self._active = True

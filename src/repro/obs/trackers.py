@@ -92,6 +92,7 @@ def available_trackers() -> tuple:
 
 
 def resolve_tracker(spec, *, run_dir: Optional[str] = None,
+                    owned: Optional[list] = None,
                     **kw) -> "MetricsTracker":
     """One resolution path for every driver:
 
@@ -100,6 +101,11 @@ def resolve_tracker(spec, *, run_dir: Optional[str] = None,
       * a registry name -> ``factory(run_dir=run_dir, **kw)``;
       * a comma list (``"jsonl,console"``) or a sequence of any of the
         above -> a :class:`CompositeTracker` over the resolved parts.
+
+    ``owned`` (when given) collects the trackers this call CONSTRUCTED —
+    registry-built leaves, not passed-through instances — so a scoped
+    caller (e.g. a per-``run()`` override) can ``finish()`` exactly what
+    it created and never close a tracker the user still holds.
     """
     if spec is None:
         return NoopTracker()
@@ -109,10 +115,14 @@ def resolve_tracker(spec, *, run_dir: Optional[str] = None,
         if "," in spec:
             spec = [s.strip() for s in spec.split(",") if s.strip()]
         else:
-            return get_tracker(spec)(run_dir=run_dir, **kw)
+            t = get_tracker(spec)(run_dir=run_dir, **kw)
+            if owned is not None:
+                owned.append(t)
+            return t
     if isinstance(spec, (list, tuple)):
-        return CompositeTracker([resolve_tracker(s, run_dir=run_dir, **kw)
-                                 for s in spec])
+        return CompositeTracker(
+            [resolve_tracker(s, run_dir=run_dir, owned=owned, **kw)
+             for s in spec])
     raise ValueError(
         f"cannot resolve a metrics tracker from {spec!r}; expected None, a "
         f"MetricsTracker, a registered name {available_trackers()}, a "
@@ -267,7 +277,13 @@ class CsvTracker(_FileTracker):
     ``tests/test_metrics_schema.py`` pins it — so drift here means a
     driver mixed configs into one file).  Vector metrics (e.g.
     ``staleness_hist``) are JSON-encoded in their cell.  Events land in
-    ``<run_dir>/events.csv`` as ``(t, event, json_payload)``."""
+    ``<run_dir>/events.csv`` as ``(t, event, json_payload)``.
+
+    Append-mode like jsonl, so a ``--resume`` run extends the same file
+    instead of truncating the earlier rounds: an existing file's header
+    row becomes the pinned header (resuming under a different config
+    raises on the first record).  Flushed on every ``run_finish`` event
+    and on :meth:`finish`."""
     name = "csv"
 
     def __init__(self, run_dir: Optional[str] = None,
@@ -276,10 +292,18 @@ class CsvTracker(_FileTracker):
         run_dir = _require_run_dir(run_dir, self.name, "metrics.csv")
         self.path = os.path.join(run_dir, filename)
         self.events_path = os.path.join(run_dir, "events.csv")
-        self._fh = open(self.path, "w", newline="", encoding="utf-8")
+        self._header: Optional[Sequence[str]] = self._existing_header(
+            self.path)
+        self._fh = open(self.path, "a", newline="", encoding="utf-8")
         self._writer = _csv.writer(self._fh)
-        self._header: Optional[Sequence[str]] = None
         self._efh = None
+
+    @staticmethod
+    def _existing_header(path: str) -> Optional[Sequence[str]]:
+        if not (os.path.exists(path) and os.path.getsize(path) > 0):
+            return None
+        with open(path, "r", newline="", encoding="utf-8") as f:
+            return next(_csv.reader(f), None)
 
     def log_metrics(self, round_idx, metrics):
         self._check_open("a metrics record")
@@ -305,11 +329,16 @@ class CsvTracker(_FileTracker):
     def log_event(self, name, data=None):
         self._check_open("an event")
         if self._efh is None:
-            self._efh = open(self.events_path, "w", newline="",
+            fresh = self._existing_header(self.events_path) is None
+            self._efh = open(self.events_path, "a", newline="",
                              encoding="utf-8")
             self._ewriter = _csv.writer(self._efh)
-            self._ewriter.writerow(["t", "event", "data"])
+            if fresh:
+                self._ewriter.writerow(["t", "event", "data"])
         self._ewriter.writerow([time.time(), name, json.dumps(data or {})])
+        if name == "run_finish":
+            self._fh.flush()
+            self._efh.flush()
 
     def finish(self):
         if not self._closed:

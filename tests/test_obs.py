@@ -21,6 +21,7 @@ round profiler, the managed checkpoint store, and their trainer wiring.
 import dataclasses
 import json
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -164,6 +165,26 @@ def test_csv_header_pinned_to_first_record(tmp_path):
     assert (tmp_path / "events.csv").exists()
 
 
+def test_csv_tracker_appends_across_resume(tmp_path):
+    """A second csv tracker over the same run dir (--resume auto) extends
+    the file instead of truncating it, re-pins the on-disk header, and
+    writes the events header exactly once."""
+    t = resolve_tracker("csv", run_dir=str(tmp_path))
+    t.log_metrics(0, {"round": 0, "a": 1.0})
+    t.log_event("run_finish", {})
+    t.finish()
+    t2 = resolve_tracker("csv", run_dir=str(tmp_path))
+    t2.log_metrics(1, {"round": 1, "a": 2.0})
+    with pytest.raises(ValueError, match="pinned"):
+        t2.log_metrics(2, {"round": 2, "b": 3.0})
+    t2.log_event("run_finish", {})
+    t2.finish()
+    rows = (tmp_path / "metrics.csv").read_text().strip().splitlines()
+    assert rows == ["round,a", "0,1.0", "1,2.0"]
+    erows = (tmp_path / "events.csv").read_text().strip().splitlines()
+    assert erows[0] == "t,event,data" and len(erows) == 3
+
+
 def test_console_tracker_prints_every_and_final(capsys):
     t = resolve_tracker("console")
     t.log_event("run_start", {"final_round": 3})
@@ -222,6 +243,57 @@ def test_profiler_writes_trace_window(tmp_path):
     starts = [e for e in events if e["event"] == "profile_start"]
     stops = [e for e in events if e["event"] == "profile_stop"]
     assert len(starts) == 1 and len(stops) == 1
+
+
+def test_run_finishes_per_call_tracker_override(tmp_path):
+    """A tracker override resolved inside run() is owned by that call:
+    its rows are flushed to disk when run() returns, without the caller
+    ever holding (or finishing) the instance."""
+    model, data = make_mlp_model(), _toy_fed_data()
+    tr = FederatedTrainer(model, BASE, seed=0, run_dir=str(tmp_path))
+    tr.run(data, rounds=2, cohort=COHORT, batch=BATCH, meta_batch=8,
+           tracker="csv")
+    rows = (tmp_path / "metrics.csv").read_text().strip().splitlines()
+    assert len(rows) == 3  # header + one row per round
+    # a caller-passed INSTANCE stays open across calls (caller owns it)
+    shared = resolve_tracker("jsonl", run_dir=str(tmp_path))
+    tr.run(data, rounds=4, cohort=COHORT, batch=BATCH, meta_batch=8,
+           tracker=shared)
+    tr.run(data, rounds=6, cohort=COHORT, batch=BATCH, meta_batch=8,
+           tracker=shared)
+    shared.finish()
+    recs = [ln for ln in read_jsonl(tmp_path / "metrics.jsonl")
+            if ln["kind"] == "metrics"]
+    assert [m["round"] for m in recs] == [2, 3, 4, 5]
+    tr.finish()
+
+
+def test_profiler_opens_on_chunk_overlapping_window(tmp_path, monkeypatch):
+    """profile_start falling mid-chunk must open the capture on the chunk
+    that CONTAINS it (window widened to chunk boundaries), not one chunk
+    late."""
+    from repro.obs.profiler import RoundProfiler
+    monkeypatch.setattr(jax.profiler, "start_trace", lambda d: None)
+    monkeypatch.setattr(jax.profiler, "stop_trace", lambda: None)
+    events = []
+
+    class Rec(MetricsTracker):
+        def log_metrics(self, r, m):
+            pass
+
+        def log_event(self, name, data=None):
+            events.append(name)
+
+        def finish(self):
+            pass
+
+    p = RoundProfiler(str(tmp_path), start=5, rounds=1, tracker=Rec())
+    # chunks of k=4: [0,4) misses the window, [4,8) contains round 5
+    assert not p.maybe_start(0, 4)
+    p.maybe_stop(4)
+    assert p.maybe_start(4, 4)
+    p.maybe_stop(8)
+    assert events == ["profile_start", "profile_stop"]
 
 
 def test_profile_without_run_dir_is_actionable():
@@ -346,6 +418,76 @@ def test_manager_surfaces_worker_errors(tmp_path):
     m.save(1, {"a": np.zeros((2,))})
     with pytest.raises(RuntimeError, match="background checkpoint write"):
         m.wait()
+
+
+def test_manager_save_snapshots_extra_before_enqueue(tmp_path, monkeypatch):
+    """The trainer passes its LIVE history list as extra and keeps
+    appending while the background write is in flight; save() must
+    snapshot it, or a checkpoint for step N captures rounds >= N and a
+    resume replays them."""
+    import repro.checkpoint.manager as mgr_mod
+    release = threading.Event()
+    real_save = mgr_mod.ckpt_save
+
+    def stalled_save(path, tree, *, extra=None):
+        assert release.wait(timeout=30)
+        real_save(path, tree, extra=extra)
+
+    monkeypatch.setattr(mgr_mod, "ckpt_save", stalled_save)
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    hist = [{"round": 0}]
+    m.save(1, {"a": np.zeros((2,))}, extra={"history": hist})
+    hist.append({"round": 1})  # round loop races ahead of the writer
+    release.set()
+    _, extra, _ = m.restore_latest({"a": np.zeros((2,))})
+    assert extra["history"] == [{"round": 0}]
+    m.close()
+
+
+def test_manager_failed_step_dropped_from_index(tmp_path):
+    """A failed background write must not leave a phantom step: latest()
+    keeps naming the newest blob actually on disk, and the failed step
+    can be re-saved (monotonicity is checked against real saves)."""
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    m.save(1, {"a": np.zeros((2,))})
+    m.wait()
+    os.makedirs(m.path(2))  # a directory squatting on the blob path
+    m.save(2, {"a": np.zeros((2,))})
+    with pytest.raises(RuntimeError, match="step 2"):
+        m.wait()
+    assert m.latest() == 1
+    tree, _, step = m.restore_latest({"a": np.zeros((2,))})
+    assert step == 1
+    np.testing.assert_array_equal(tree["a"], np.zeros((2,)))
+    os.rmdir(m.path(2))
+    m.save(2, {"a": np.ones((2,))})  # the suggested recovery: re-save
+    m.wait()
+    assert m.latest() == 2
+    m.close()
+
+
+def test_manager_prune_manifest_lands_before_unlink(tmp_path, monkeypatch):
+    """Crash-window ordering: at the moment a pruned blob is unlinked,
+    the on-disk manifest must already have dropped its step — a reader
+    never sees a manifest naming a half-deleted blob."""
+    m = CheckpointManager(str(tmp_path), keep_last=1, background=False)
+    m.save(1, {"a": np.zeros((2,))})
+    unlinked = []
+    real_remove = os.remove
+
+    def spy_remove(path, *a, **kw):
+        name = os.path.basename(str(path))
+        if name.startswith("step_"):
+            step = int(name[5:13])
+            assert step not in m.saved_steps()
+            unlinked.append(step)
+        return real_remove(path, *a, **kw)
+
+    monkeypatch.setattr(os, "remove", spy_remove)
+    m.save(2, {"a": np.zeros((2,))})
+    assert unlinked == [1]
+    assert m.saved_steps() == [2]
+    m.close()
 
 
 def test_manager_guards_bad_retention_config(tmp_path):
