@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from common import bench_tracker
+from common import bench_tracker, write_bench_report
 from repro.configs.base import FedConfig
 from repro.core import FederatedTrainer
 from repro.data.pipeline import FederatedData
@@ -225,8 +225,7 @@ def main():
     }
     trk.log_event("bench_report", report)
     trk.finish()
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench_report(args.out, report, bench="async_throughput")
     print(json.dumps(report, indent=1))
     if not all(gates.values()):
         failed = [k for k, v in gates.items() if not v]

@@ -44,7 +44,8 @@ from repro.configs.base import FedConfig
 from repro.core import init_server_state, make_federated_round
 from repro.launch.mesh import make_debug_mesh
 from repro.sharding.specs import cohort_grad_shardings
-from common import bench_tracker, peak_memory_bytes  # noqa: E402
+from common import (bench_tracker, peak_memory_bytes,  # noqa: E402
+                    write_bench_report)
 from round_latency import make_mlp_model, D, CLASSES
 
 BATCH, LOCAL_STEPS, CHUNK = 8, 2, 8
@@ -182,8 +183,7 @@ def main():
     }
     trk.log_event("bench_report", report)
     trk.finish()
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench_report(args.out, report, bench="cohort_scaling")
     print(json.dumps(report, indent=1))
     if not all(v for k, v in report.items() if k.startswith("pass_")):
         sys.exit(1)

@@ -12,7 +12,9 @@ method ordering, rounds-to-milestone ratios, and final-accuracy gaps.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -46,6 +48,30 @@ def bench_tracker(bench: str, run_dir: Optional[str] = None):
                                    "runs", bench)
     os.makedirs(base, exist_ok=True)
     return resolve_tracker("jsonl", run_dir=base)
+
+
+def write_bench_report(path: str, report: Dict, *, bench: str,
+                       config: Optional[Dict] = None) -> Dict:
+    """THE ``BENCH_*.json`` writer — every bench script's verdict goes
+    through here so the files share one schema.  Prepends a ``meta``
+    stamp::
+
+        {"meta": {"bench", "config", "host", "jax_version"}, ...report}
+
+    which is what lets ``python -m repro.obs.compare`` refuse
+    apples-to-oranges comparisons (different bench, different config)
+    with a message naming the mismatched field, while only *warning* on
+    host/jax_version drift (exactly what CI compares across).  Returns
+    the stamped report (also printed by most callers)."""
+    meta = {"bench": bench,
+            "config": dict(config or report.get("config") or {}),
+            "host": platform.node(),
+            "jax_version": jax.__version__}
+    stamped = {"meta": meta, **{k: v for k, v in report.items()
+                                if k != "meta"}}
+    with open(path, "w") as f:
+        json.dump(stamped, f, indent=1)
+    return stamped
 
 
 def evaluate(model, params, data: FederatedData, idx: np.ndarray,

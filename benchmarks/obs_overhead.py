@@ -33,7 +33,7 @@ import time
 import jax
 import numpy as np
 
-from common import bench_tracker
+from common import bench_tracker, write_bench_report
 from repro.configs.base import FedConfig
 from repro.core import FederatedTrainer
 from async_throughput import make_data, make_mlp_model
@@ -193,8 +193,7 @@ def main():
     }
     trk.log_event("bench_report", report)
     trk.finish()
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench_report(args.out, report, bench="obs_overhead")
     print(json.dumps(report, indent=1))
     if not report["ok"]:
         print("obs_overhead: GATE FAILURE", file=sys.stderr)

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from common import bench_tracker
+from common import bench_tracker, write_bench_report
 from repro.configs.base import FedConfig
 from repro.core import (init_server_state, make_federated_round,
                         RoundFnCache, server_opt, stack_round_inputs,
@@ -338,8 +338,7 @@ def main():
     }
     trk.log_event("bench_report", report)
     trk.finish()
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench_report(args.out, report, bench="round_latency")
     print(json.dumps(report, indent=1))
 
 

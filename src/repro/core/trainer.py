@@ -32,6 +32,12 @@ instance, or comma list; default ``noop``), each chunk's host phases
 (``sample_stack`` / ``dispatch`` / ``device_sync`` / ``checkpoint``) are
 emitted as ``phase`` events, and ``profile=N`` captures a JAX trace for
 rounds ``[profile_start, profile_start+N)`` into ``run_dir/profile``.
+The analysis layer rides on top: ``trace_summary=True`` parses the
+closed capture into a ``profile_summary`` event (top ops by self time,
+busy/gap, per-phase attribution — ``repro.obs.trace_analysis``) and
+``roofline=True`` emits a ``roofline`` event per compiled chunk program
+(trip-count-aware predicted cost vs the measured dispatch + device-sync
+throughput — ``repro.roofline.live``).
 The legacy ``log_every``/``log_fn`` arguments still work: they compose a
 ``console`` tracker into the run's sink.
 
@@ -46,6 +52,7 @@ passes through to :func:`repro.core.round.make_federated_round`.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Any, Callable, Dict, List, Optional
 
@@ -84,6 +91,8 @@ class FederatedTrainer:
                  checkpoint_every: Optional[int] = None,
                  keep_last: int = 3, keep_every: int = 0,
                  profile: int = 0, profile_start: int = 0,
+                 trace_summary: bool = False, trace_top_k: int = 15,
+                 roofline: bool = False,
                  **round_kwargs):
         self.model = model
         self.fed = fed
@@ -106,6 +115,21 @@ class FederatedTrainer:
         self.tracker = resolve_tracker(tracker, run_dir=run_dir)
         self.profiler = RoundProfiler(run_dir, start=profile_start,
                                       rounds=profile, tracker=self.tracker)
+        # ---- analysis layer (PR 10) ---------------------------------------
+        # trace_summary: when the --profile window closes, parse the trace
+        # into a profile_summary tracker event (obs/trace_analysis);
+        # roofline: AOT-compile each distinct chunk program once, run the
+        # trip-count-aware cost model, and emit a roofline event with
+        # predicted vs measured rounds/s (roofline/live)
+        if trace_summary and profile <= 0:
+            raise ValueError(
+                "trace_summary summarizes the profiler's capture and needs "
+                "an open window; pass profile=N (train.py --profile N) "
+                "alongside trace_summary")
+        self._trace_summary = bool(trace_summary)
+        self._trace_top_k = int(trace_top_k)
+        self._roofline = bool(roofline)
+        self._roofline_events: Dict[int, Optional[dict]] = {}
         self._ckpt_every = checkpoint_every
         self.manager: Optional[CheckpointManager] = None
         if checkpoint_every is not None:
@@ -161,7 +185,12 @@ class FederatedTrainer:
         (idempotent).  Drivers that own the run call this once at exit;
         callers that passed a shared tracker instance should close it
         themselves instead."""
+        was_active = self.profiler.active
         self.profiler.close()
+        if was_active:
+            # the run ended inside the capture window; the aborted trace
+            # is still on disk, so the summary still lands
+            self._emit_trace_summary(self.tracker)
         if self.manager is not None:
             self.manager.close()
         self.tracker.finish()
@@ -220,6 +249,7 @@ class FederatedTrainer:
         retry_on = (self.fed.retry_backoff > 0 and faults.active
                     and (faults.crash > 0 or faults.drop > 0
                          or faults.deadline > 0))
+        loop_s, rounds_measured = 0.0, 0
         while r < rounds:
             k = min(self.rounds_per_call, rounds - r)
             with span(trk, "sample_stack", round=r, k=k):
@@ -234,15 +264,26 @@ class FederatedTrainer:
                          for j in range(k)]
                 rngs = [round_key(self.key, r + j) for j in range(k)]
                 staged = self._stage_inputs(samples, metas, rngs)
+            if self._roofline and k not in self._roofline_events:
+                # before dispatch: staged buffers may be donated by the
+                # round program; the abstract shapes must be read first
+                self._prepare_roofline(k, staged)
             self.profiler.maybe_start(r, k)
-            with span(trk, "dispatch", round=r, k=k):
+            with span(trk, "dispatch", round=r, k=k) as sp_d, \
+                    self._phase_annotation("dispatch"):
                 metrics = self._dispatch(k, staged)
-            with span(trk, "device_sync", round=r, k=k):
+            with span(trk, "device_sync", round=r, k=k) as sp_s, \
+                    self._phase_annotation("device_sync"):
                 # the dispatch span above measures enqueue time only (jax
                 # dispatch is async); this one is the actual device work
                 # left to drain — together they expose the overlap
                 metrics = jax.block_until_ready(metrics)
+            was_profiling = self.profiler.active
             self.profiler.maybe_stop(r + k)
+            if was_profiling and not self.profiler.active:
+                self._emit_trace_summary(trk)
+            loop_s += sp_d["dur_s"] + sp_s["dur_s"]
+            rounds_measured += k
 
             # THE record assembly — every driver shares this one.  Vector
             # metrics (e.g. the async runtime's staleness_hist) become
@@ -270,9 +311,61 @@ class FederatedTrainer:
         if self.manager is not None and self._last_managed_step != r:
             with span(trk, "checkpoint", round=r - 1):
                 self._save_managed(r)
+        if self._roofline:
+            self._emit_roofline(trk, loop_s, rounds_measured)
         trk.log_event("run_finish", {"final_round": rounds - 1,
                                      "rounds_completed": len(run_history)})
         return run_history
+
+    # ---- analysis-layer hooks (PR 10) -------------------------------------
+    def _phase_annotation(self, name: str):
+        """The trace twin of the ``span()`` event: while the profiler is
+        capturing, wrap the phase in a ``repro.phase.<name>``
+        TraceAnnotation so ``obs/trace_analysis`` can attribute device
+        op self-time to phases.  A no-op context outside the window."""
+        if self.profiler.active:
+            return jax.profiler.TraceAnnotation(f"repro.phase.{name}")
+        return contextlib.nullcontext()
+
+    def _emit_trace_summary(self, trk) -> None:
+        if not self._trace_summary:
+            return
+        from repro.obs.trace_analysis import emit_profile_summary
+        emit_profile_summary(trk, self.profiler.trace_dir,
+                             top_k=self._trace_top_k)
+
+    def _prepare_roofline(self, k: int, staged) -> None:
+        """AOT lower + compile the chunk program for ``k`` on abstract
+        stand-ins of the real staged inputs and cache its cost-model
+        event payload.  Runs once per distinct k, outside the profiler
+        window and the phase spans (analysis time is recorded in the
+        event, not smeared into the measured phases)."""
+        from repro.roofline.live import round_roofline_event
+        absargs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.result_type(x)),
+            (self.state, *staged))
+        # sanitize-mode rounds are checkify closures without .lower —
+        # round_roofline_event returns None and the event is skipped
+        self._roofline_events[k] = round_roofline_event(
+            self._cache(k), absargs, rounds_per_call=k)
+
+    def _emit_roofline(self, trk, loop_s: float, rounds_measured: int
+                       ) -> None:
+        """One ``roofline`` event per compiled chunk program, with this
+        run's measured dispatch + device-sync throughput attached so
+        prediction and measurement share a metrics.jsonl line."""
+        for k in sorted(self._roofline_events):
+            ev = self._roofline_events[k]
+            if ev is None:
+                continue
+            payload = dict(ev)
+            payload["rounds_measured"] = rounds_measured
+            payload["measured_s_per_round"] = \
+                (loop_s / rounds_measured) if rounds_measured else 0.0
+            payload["measured_rounds_per_s"] = \
+                (rounds_measured / loop_s) if loop_s > 0 else 0.0
+            trk.log_event("roofline", payload)
 
     def _save_managed(self, step: int) -> None:
         self.manager.save(step, self.state,

@@ -28,8 +28,8 @@ from repro.configs import (ARCHS, SHAPES, SKIPS, FedConfig, get_arch,
 from repro.core import init_server_state, make_federated_round
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import build_model
-from repro.roofline.analysis import (model_flops_per_round, parse_collectives,
-                                     roofline_terms)
+from repro.roofline.analysis import model_flops_per_round, roofline_terms
+from repro.roofline.live import compiled_cost_summary
 
 SDS = jax.ShapeDtypeStruct
 
@@ -222,25 +222,21 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
 
-    mem = compiled.memory_analysis()
-    if mem is not None:
-        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
-                     "temp_size_in_bytes", "generated_code_size_in_bytes",
-                     "alias_size_in_bytes"):
-            v = getattr(mem, attr, None)
-            if v is not None:
-                rec.setdefault("memory", {})[attr] = int(v)
+    # one compiled-program cost pass shared with the trainer's live
+    # roofline hook (repro.roofline.live) — trip-count-aware HLO walk,
+    # collective schedule, memory_analysis sizes
+    s = compiled_cost_summary(compiled)
+    if s["memory"]:
+        rec["memory"] = s["memory"]
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):     # jax 0.4.x: list of one dict
         cost = cost[0] if cost else {}
-    flops = float(cost.get("flops", 0.0))
-    bytes_acc = float(cost.get("bytes accessed", 0.0))
     rec["cost"] = {k: float(v) for k, v in cost.items()
                    if isinstance(v, (int, float)) and (
                        "flops" in k or "bytes" in k or "utilization" not in k)}
+    flops, bytes_acc = s["xla_flops"], s["xla_bytes_accessed"]
 
-    hlo = compiled.as_text()
-    coll = parse_collectives(hlo)
+    coll = s["collectives"]
     rec["collectives"] = coll
     coll_bytes = sum(v for k, v in coll.items() if not k.startswith("_"))
     mf = model_flops_per_round(arch_cfg, shape, fed)
@@ -248,21 +244,18 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool = False,
                         model_flops_global=mf, chips=chips)
     rec["roofline_raw"] = rl.to_dict()
     # trip-count-aware cost model (XLA cost_analysis counts while bodies
-    # once — see roofline/hlo_cost.py); this is the table-of-record
-    from repro.roofline.hlo_cost import analyze as hlo_analyze
-    cost = hlo_analyze(hlo)
-    rec["hlo_cost"] = {"flops": cost.flops,
-                       "bytes_written": cost.bytes_written,
-                       "collective_bytes": cost.collective_bytes,
-                       "per_collective": cost.per_collective}
-    # memory term: raw cost_analysis bytes are fusion-aware but count loop
-    # bodies once — scale by the flops correction ratio (same loop
-    # structure), keeping fusion-level granularity
-    loop_ratio = cost.flops / max(flops, 1.0)
-    rl2 = roofline_terms(cost.flops, bytes_acc * max(loop_ratio, 1.0),
-                         cost.collective_bytes, model_flops_global=mf,
+    # once — see roofline/hlo_cost.py); this is the table-of-record.  The
+    # memory term uses bytes_est: raw cost_analysis bytes scaled by the
+    # flops correction ratio (same loop structure), keeping fusion-level
+    # granularity
+    rec["hlo_cost"] = {"flops": s["hlo_flops"],
+                       "bytes_written": s["hlo_bytes_written"],
+                       "collective_bytes": s["collective_bytes"],
+                       "per_collective": s["per_collective"],
+                       "loop_ratio": s["loop_ratio"]}
+    rl2 = roofline_terms(s["hlo_flops"], s["bytes_est"],
+                         s["collective_bytes"], model_flops_global=mf,
                          chips=chips)
-    rec["hlo_cost"]["loop_ratio"] = loop_ratio
     rec["roofline"] = rl2.to_dict()
     if verbose:
         print(f"[dryrun] {arch_name} x {shape_name} mesh={rec['mesh']} "

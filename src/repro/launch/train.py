@@ -88,7 +88,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
                  round_deadline: float = 0.0, retry_backoff: int = 0,
                  sanitize: bool = False, tracker: Optional[str] = None,
                  run_dir: Optional[str] = None, profile: int = 0,
-                 profile_start: int = 0, ckpt_every: int = 0,
+                 profile_start: int = 0, trace_summary: bool = False,
+                 roofline: bool = False, ckpt_every: int = 0,
                  keep_last: int = 3, keep_every: int = 0):
     """``rounds_per_call=K``: K rounds compile into ONE donated scan program
     and metrics sync to host once per K rounds.  ``fused``: flat-buffer
@@ -105,7 +106,13 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
     Observability (``repro.obs``): ``tracker`` is a registry name or comma
     list (``jsonl,console``) writing under ``run_dir``; ``profile=N``
     captures a JAX trace for rounds ``[profile_start, profile_start+N)``
-    into ``run_dir/profile``.  With a ``run_dir``, the trainer keeps a
+    into ``run_dir/profile``.  ``trace_summary`` parses that capture
+    into a ``profile_summary`` tracker event (top ops by self time,
+    busy/gap, per-phase attribution) when the window closes;
+    ``roofline`` emits a ``roofline`` event per compiled round program
+    (trip-count-aware predicted cost + measured rounds/s — inspect with
+    ``python -m repro.roofline.report <run_dir>``).  With a
+    ``run_dir``, the trainer keeps a
     managed checkpoint store in ``run_dir/checkpoints`` (a save every
     ``ckpt_every`` rounds — 0: once at run end — with ``keep_last`` /
     ``keep_every`` retention)."""
@@ -161,7 +168,8 @@ def run_training(arch: str, *, rounds: int, cohort: int, client_batch: int,
         sanitize=sanitize, tracker=tracker, run_dir=run_dir,
         checkpoint_every=ckpt_every if run_dir is not None else None,
         keep_last=keep_last, keep_every=keep_every, profile=profile,
-        profile_start=profile_start, **round_kwargs)
+        profile_start=profile_start, trace_summary=trace_summary,
+        roofline=roofline, **round_kwargs)
     if resume == "auto":
         if run_dir is None:
             raise ValueError(
@@ -290,6 +298,17 @@ def main():
                          "<run-dir>/profile (0: off)")
     ap.add_argument("--profile-start", type=int, default=0,
                     help="first round of the --profile capture window")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="when the --profile window closes, parse the "
+                         "trace into a profile_summary tracker event "
+                         "(top ops by self time, busy/gap, per-phase "
+                         "attribution); needs --profile N")
+    ap.add_argument("--roofline", action="store_true",
+                    help="emit a roofline tracker event per compiled "
+                         "round program: trip-count-aware predicted "
+                         "compute/memory/collective cost + measured "
+                         "rounds/s (python -m repro.roofline.report "
+                         "<run-dir> to inspect)")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="managed-store save period in rounds (needs "
                          "--run-dir; 0: one save at run end)")
@@ -380,7 +399,9 @@ def main():
         round_deadline=args.round_deadline,
         retry_backoff=args.retry_backoff, sanitize=args.sanitize,
         tracker=args.tracker, run_dir=args.run_dir, profile=args.profile,
-        profile_start=args.profile_start, ckpt_every=args.ckpt_every,
+        profile_start=args.profile_start,
+        trace_summary=args.trace_summary, roofline=args.roofline,
+        ckpt_every=args.ckpt_every,
         keep_last=args.keep_last, keep_every=args.keep_every)
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),

@@ -50,11 +50,38 @@ from typing import FrozenSet
 from repro.configs.base import FedConfig
 from repro.sim.faults import resolve_faults
 
-__all__ = ["round_metric_keys", "VECTOR_METRICS"]
+__all__ = ["round_metric_keys", "VECTOR_METRICS",
+           "ROOFLINE_EVENT_KEYS", "PROFILE_SUMMARY_EVENT_KEYS"]
 
 # metrics whose per-round value is a vector (a list in records / jsonl,
 # a JSON-encoded cell in csv) rather than a scalar float
 VECTOR_METRICS: FrozenSet[str] = frozenset({"staleness_hist"})
+
+# ---------------------------------------------------------------------------
+# analysis-event schemas (PR 10) — the two structured events the trainer
+# emits beyond phase/profiler/checkpoint markers.  The jsonl tracker adds
+# its envelope ("kind"/"event"/"t") on top of these payload keys;
+# tests/test_metrics_schema.py pins live trainer events against both.
+# ---------------------------------------------------------------------------
+
+# one per compiled round program (trainer roofline=True): the trip-count-
+# aware cost model's per-round prediction (repro.roofline.live) plus the
+# measured rounds/s from the dispatch + device-sync spans
+ROOFLINE_EVENT_KEYS: FrozenSet[str] = frozenset({
+    "rounds_per_call", "flops_per_round", "bytes_per_round",
+    "collective_bytes_per_round", "per_collective", "compute_s_per_round",
+    "memory_s_per_round", "collective_s_per_round", "bottleneck",
+    "predicted_rounds_per_s", "loop_ratio", "xla_flops", "memory",
+    "analysis_s", "measured_rounds_per_s", "measured_s_per_round",
+    "rounds_measured"})
+
+# one per captured trace (trainer trace_summary=True): the top-K
+# self-time table and busy/gap/phase attribution
+# (repro.obs.trace_analysis.summarize_trace)
+PROFILE_SUMMARY_EVENT_KEYS: FrozenSet[str] = frozenset({
+    "trace", "top_k", "n_events", "n_op_events", "n_ops", "wall_us",
+    "busy_us", "gap_us", "busy_frac", "total_self_us", "top_ops",
+    "phase_self_us"})
 
 
 def round_metric_keys(fed: FedConfig, *, trainer: bool = True

@@ -33,6 +33,12 @@ the shared :class:`repro.core.registry.Registry`):
                 one from a comma list: ``--tracker jsonl,console``)
   ============  =========================================================
 
+``tensorboard`` is also registered, behind an optional-dependency gate:
+it needs a ``SummaryWriter`` backend (``tensorboardX``, or torch's
+bundled copy) and raises an actionable ImportError naming the pip
+install when neither is importable — minimal installs (CI) use the
+always-available trackers above instead.
+
 Register alternatives (a wandb/tensorboard bridge, a socket shipper) with
 :func:`register_tracker`; any registered name is selectable via
 ``FederatedTrainer(..., tracker="name")`` and ``train.py --tracker name``.
@@ -50,8 +56,8 @@ from repro.core.registry import Registry
 
 __all__ = ["MetricsTracker", "NoopTracker", "ConsoleTracker",
            "JsonlTracker", "CsvTracker", "CompositeTracker",
-           "register_tracker", "get_tracker", "available_trackers",
-           "resolve_tracker", "span"]
+           "TensorBoardTracker", "register_tracker", "get_tracker",
+           "available_trackers", "resolve_tracker", "span"]
 
 
 class MetricsTracker:
@@ -147,14 +153,18 @@ def span(tracker: MetricsTracker, phase: str, **data):
     sample/stack, dispatch, device-sync (``block_until_ready``) and
     checkpoint stages so async-dispatch-vs-compute overlap is visible in
     the event stream (a long ``device_sync`` next to a short ``dispatch``
-    IS the overlap)."""
+    IS the overlap).
+
+    Yields a dict that carries ``dur_s`` after the block exits, so the
+    caller can read the measured duration back without re-timing (the
+    trainer's measured-rounds/s accounting for the roofline event)."""
+    info = dict(data)
     t0 = time.perf_counter()
     try:
-        yield
+        yield info
     finally:
-        tracker.log_event("phase", {"phase": phase,
-                                    "dur_s": time.perf_counter() - t0,
-                                    **data})
+        info["dur_s"] = time.perf_counter() - t0
+        tracker.log_event("phase", {"phase": phase, **info})
 
 
 # ---------------------------------------------------------------------------
@@ -373,3 +383,81 @@ class CompositeTracker(MetricsTracker):
     def finish(self):
         for t in self.trackers:
             t.finish()
+
+
+def _summary_writer_cls():
+    """The optional-dependency gate for the tensorboard tracker: prefer
+    ``tensorboardX`` (pure-python, no TF), fall back to torch's bundled
+    writer, and otherwise raise an ImportError that names the install —
+    the registry factory stays importable either way, so
+    ``available_trackers()`` always lists the name."""
+    try:
+        from tensorboardX import SummaryWriter
+        return SummaryWriter
+    except ImportError:
+        pass
+    try:
+        from torch.utils.tensorboard import SummaryWriter
+        return SummaryWriter
+    except ImportError as e:
+        raise ImportError(
+            "the 'tensorboard' tracker needs a SummaryWriter backend and "
+            "neither 'tensorboardX' nor 'torch' is installed; pip install "
+            "tensorboardX (the lightweight extra) — or use the built-in "
+            "jsonl/csv trackers, which need nothing") from e
+
+
+@register_tracker("tensorboard")
+class TensorBoardTracker(_FileTracker):
+    """TensorBoard event files under ``<run_dir>/tb/`` — scalars from
+    every round record (vector metrics like ``staleness_hist`` become
+    histograms when the backend supports them, and are skipped
+    otherwise), plus per-phase ``span`` durations on their round step.
+    Other events are counted, not plotted — the jsonl stream stays the
+    full-fidelity record; this is the dashboard view."""
+    name = "tensorboard"
+
+    def __init__(self, run_dir: Optional[str] = None,
+                 subdir: str = "tb"):
+        super().__init__()
+        cls = _summary_writer_cls()
+        run_dir = _require_run_dir(run_dir, self.name,
+                                   "tensorboard event files")
+        self.log_dir = os.path.join(run_dir, subdir)
+        self._writer = cls(self.log_dir)
+
+    def log_metrics(self, round_idx, metrics):
+        self._check_open("a metrics record")
+        for k, v in metrics.items():
+            if k == "round":
+                continue
+            if isinstance(v, (list, tuple)):
+                try:
+                    self._writer.add_histogram(f"round/{k}", list(v),
+                                               int(round_idx))
+                except Exception:  # noqa: BLE001 — backend-optional
+                    pass
+            elif isinstance(v, (int, float)):
+                self._writer.add_scalar(f"round/{k}", float(v),
+                                        int(round_idx))
+
+    def log_event(self, name, data=None):
+        self._check_open("an event")
+        data = data or {}
+        if name == "phase" and "dur_s" in data:
+            self._writer.add_scalar(f"phase/{data.get('phase', '?')}_s",
+                                    float(data["dur_s"]),
+                                    int(data.get("round", 0)))
+        elif name == "roofline":
+            for k in ("predicted_rounds_per_s", "measured_rounds_per_s"):
+                v = data.get(k)
+                if isinstance(v, (int, float)):
+                    self._writer.add_scalar(f"roofline/{k}", float(v),
+                                            int(data.get("rounds_per_call",
+                                                         0)))
+
+    def finish(self):
+        if not self._closed:
+            self._writer.flush()
+            self._writer.close()
+        super().finish()

@@ -148,3 +148,37 @@ def test_schema_is_frozen_and_trainer_flag():
     # trainer=False drops the host-side additions
     raw = round_metric_keys(fed, trainer=False)
     assert "round" not in raw and raw <= keys
+
+
+# ---------------------------------------------------------------------------
+# analysis-event schemas (PR 10): the roofline / profile_summary payloads
+# the trainer emits are pinned to the frozensets in repro.obs.schema, the
+# same way round records are pinned to round_metric_keys above.
+# ---------------------------------------------------------------------------
+def test_roofline_event_schema_matches_live_payload():
+    from repro.obs import ROOFLINE_EVENT_KEYS
+    from repro.roofline.live import round_roofline_event
+
+    fn = jax.jit(lambda x: (x @ x.T).sum())
+    ev = round_roofline_event(
+        fn, (jax.ShapeDtypeStruct((8, 8), jnp.float32),),
+        rounds_per_call=2)
+    assert ev is not None
+    # live.py produces everything except the trainer's measured_* triple
+    measured = {"measured_rounds_per_s", "measured_s_per_round",
+                "rounds_measured"}
+    assert set(ev) == set(ROOFLINE_EVENT_KEYS) - measured
+    assert measured < ROOFLINE_EVENT_KEYS
+    assert ev["rounds_per_call"] == 2
+
+    # a callable without .lower (sanitize-mode closure) is skipped, and
+    # the skip is a None — not a crash, not a partial event
+    assert round_roofline_event(lambda x: x, (1.0,)) is None
+
+
+def test_profile_summary_event_schema_matches_summarizer():
+    from repro.obs import PROFILE_SUMMARY_EVENT_KEYS
+    from repro.obs.trace_analysis import summarize
+
+    payload = summarize({"traceEvents": []})
+    assert set(payload) | {"trace"} == set(PROFILE_SUMMARY_EVENT_KEYS)

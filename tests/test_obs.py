@@ -508,3 +508,63 @@ def test_manager_donation_safe_snapshot(tmp_path):
     tree, _, _ = m.restore_latest({"a": np.zeros((4,))})
     np.testing.assert_array_equal(tree["a"], np.arange(4.0))
     m.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 10 additions: span() yields its info dict; the tensorboard tracker's
+# optional-dependency gate
+# ---------------------------------------------------------------------------
+def test_span_yields_info_dict_with_dur(tmp_path):
+    t = resolve_tracker("jsonl", run_dir=str(tmp_path))
+    with span(t, "dispatch", round=3) as info:
+        info["extra"] = 7
+    assert info["dur_s"] >= 0          # readable AFTER the block
+    t.finish()
+    ev = [ln for ln in read_jsonl(tmp_path / "metrics.jsonl")
+          if ln["kind"] == "event"][0]
+    assert ev["phase"] == "dispatch" and ev["round"] == 3
+    assert ev["extra"] == 7 and ev["dur_s"] == info["dur_s"]
+
+
+def test_tensorboard_tracker_registered_and_gated(tmp_path):
+    """'tensorboard' is always listed; constructing it either works (a
+    SummaryWriter backend is installed) or raises the actionable
+    ImportError naming the install — never a bare module error."""
+    assert "tensorboard" in available_trackers()
+    factory = get_tracker("tensorboard")
+    try:
+        import tensorboardX  # noqa: F401
+        have_backend = True
+    except ImportError:
+        try:
+            from torch.utils import tensorboard  # noqa: F401
+            have_backend = True
+        except ImportError:
+            have_backend = False
+
+    if not have_backend:
+        with pytest.raises(ImportError, match="tensorboardX"):
+            factory(run_dir=str(tmp_path))
+        return
+
+    t = factory(run_dir=str(tmp_path))
+    t.log_metrics(0, {"round": 0, "client_loss": 1.5,
+                      "staleness_hist": [1.0, 2.0, 3.0]})
+    with span(t, "dispatch", round=0):
+        pass
+    t.log_event("roofline", {"predicted_rounds_per_s": 10.0,
+                             "measured_rounds_per_s": 8.0,
+                             "rounds_measured": 4})
+    t.finish()
+    t.finish()                         # idempotent like the others
+    tb = os.path.join(str(tmp_path), "tb")
+    assert os.path.isdir(tb)
+    assert any("tfevents" in f for f in os.listdir(tb))
+    with pytest.raises(RuntimeError, match="finish"):
+        t.log_metrics(1, {"round": 1})
+
+
+def test_tensorboard_tracker_requires_run_dir():
+    pytest.importorskip("tensorboardX")
+    with pytest.raises(ValueError, match="run_dir"):
+        get_tracker("tensorboard")()

@@ -1,0 +1,294 @@
+"""Regression watch (PR 10): ``repro.obs.regress`` + the
+``python -m repro.obs.compare`` CLI.
+
+Exit-code contract under test: 0 = within tolerance, 1 = breach,
+2 = refusal (schema / config mismatch — apples to oranges).  Run-dir
+mode is driven by synthetic hand-written ``metrics.jsonl`` files so the
+deltas are exactly computable; bench-file mode by stamped reports from
+``benchmarks.common.write_bench_report``.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs.compare import main as compare_main
+from repro.obs.regress import (Tolerances, compare_bench_files,
+                               compare_run_dirs, summarize_run)
+from repro.obs.report import main as report_main
+
+# ---------------------------------------------------------------------------
+# synthetic run dirs
+# ---------------------------------------------------------------------------
+
+
+def _write_run(run_dir, *, rounds=4, loss0=2.0, loss_step=-0.1,
+               dispatch_s=0.10, sync_s=0.02, extra_key=None,
+               comm_bytes=None, temp_bytes=1000):
+    os.makedirs(run_dir, exist_ok=True)
+    lines = [{"kind": "event", "event": "run_start", "t": 0.0}]
+    for r in range(rounds):
+        rec = {"kind": "metrics", "round": r,
+               "client_loss": loss0 + r * loss_step, "grad_norm": 1.0}
+        if extra_key:
+            rec[extra_key] = 0.0
+        if comm_bytes is not None:
+            rec["comm_bytes"] = comm_bytes
+        lines.append(rec)
+        lines.append({"kind": "event", "event": "phase",
+                      "phase": "dispatch", "dur_s": dispatch_s})
+        lines.append({"kind": "event", "event": "phase",
+                      "phase": "device_sync", "dur_s": sync_s})
+    lines.append({"kind": "event", "event": "roofline",
+                  "rounds_per_call": 1, "predicted_rounds_per_s": 100.0,
+                  "memory": {"temp_size_in_bytes": temp_bytes}})
+    lines.append({"kind": "event", "event": "run_finish", "t": 1.0})
+    with open(os.path.join(run_dir, "metrics.jsonl"), "w") as f:
+        for ln in lines:
+            f.write(json.dumps(ln) + "\n")
+    return run_dir
+
+
+def test_summarize_run(tmp_path):
+    s = summarize_run(_write_run(str(tmp_path / "a")))
+    assert s["rounds"] == 4
+    assert s["metric_keys"] == ["client_loss", "grad_norm", "round"]
+    assert s["final_loss"] == pytest.approx(1.7)
+    assert s["min_loss"] == pytest.approx(1.7)
+    # 4 rounds / (4 * 0.12 s of dispatch+sync)
+    assert s["rounds_per_s"] == pytest.approx(4 / 0.48)
+    assert s["phase_s"]["dispatch"] == pytest.approx(0.4)
+    assert s["peak_temp_bytes"] == 1000
+    assert s["roofline"]["predicted_rounds_per_s"] == 100.0
+
+
+def test_summarize_run_missing_jsonl(tmp_path):
+    with pytest.raises(FileNotFoundError, match="tracker"):
+        summarize_run(str(tmp_path))
+
+
+def test_identical_run_dirs_pass(tmp_path):
+    a = _write_run(str(tmp_path / "a"))
+    b = _write_run(str(tmp_path / "b"))
+    code, deltas = compare_run_dirs(a, b)
+    assert code == 0
+    assert all(d.status in ("ok", "info") for d in deltas)
+
+
+def test_throughput_regression_breaches(tmp_path):
+    a = _write_run(str(tmp_path / "a"), dispatch_s=0.10)
+    # 3x slower dispatch: rounds_per_s drops ~64% > 25% tol, and the
+    # dispatch phase total grows 3x > 25% + 0.05 s slack
+    b = _write_run(str(tmp_path / "b"), dispatch_s=0.30)
+    code, deltas = compare_run_dirs(a, b)
+    assert code == 1
+    breached = {d.name for d in deltas if d.status == "BREACH"}
+    assert "rounds_per_s" in breached
+    assert "phase_s.dispatch" in breached
+    # loosening the tolerance clears it
+    code, _ = compare_run_dirs(a, b, Tolerances(perf_rel=0.95,
+                                                phase_rel=3.0))
+    assert code == 0
+
+
+def test_loss_regression_breaches(tmp_path):
+    a = _write_run(str(tmp_path / "a"), loss0=2.0)
+    b = _write_run(str(tmp_path / "b"), loss0=2.2)   # +10% > 2% tol
+    code, deltas = compare_run_dirs(a, b)
+    assert any(d.name == "final_loss" and d.status == "BREACH"
+               for d in deltas)
+    assert code == 1
+
+
+def test_memory_growth_breaches(tmp_path):
+    a = _write_run(str(tmp_path / "a"), temp_bytes=1000)
+    b = _write_run(str(tmp_path / "b"), temp_bytes=1200)  # +20% > 10%
+    code, deltas = compare_run_dirs(a, b)
+    assert any(d.name == "peak_temp_bytes" and d.status == "BREACH"
+               for d in deltas)
+    assert code == 1
+
+
+def test_comm_bytes_two_sided(tmp_path):
+    a = _write_run(str(tmp_path / "a"), comm_bytes=1000)
+    b = _write_run(str(tmp_path / "b"), comm_bytes=900)  # smaller is
+    code, deltas = compare_run_dirs(a, b)                # still a delta
+    assert any(d.name == "comm_bytes" and d.status == "BREACH"
+               for d in deltas)
+    assert code == 1
+
+
+def test_metric_key_drift_refuses(tmp_path):
+    a = _write_run(str(tmp_path / "a"))
+    b = _write_run(str(tmp_path / "b"), extra_key="meta_loss")
+    code, deltas = compare_run_dirs(a, b)
+    assert code == 2
+    assert deltas[0].status == "REFUSE"
+    assert "meta_loss" in deltas[0].note
+
+
+def test_round_count_mismatch_refuses(tmp_path):
+    a = _write_run(str(tmp_path / "a"), rounds=4)
+    b = _write_run(str(tmp_path / "b"), rounds=5)
+    code, deltas = compare_run_dirs(a, b)
+    assert code == 2 and deltas[0].name == "rounds"
+
+
+# ---------------------------------------------------------------------------
+# bench-file mode
+# ---------------------------------------------------------------------------
+def _bench_report(path, *, bench="round_latency", host="ci-1",
+                  jaxv="0.4.37", cohort=8, per_s=50.0, ok=True,
+                  bytes_=4096):
+    rep = {"meta": {"bench": bench,
+                    "config": {"cohort": cohort, "rounds": 10},
+                    "host": host, "jax_version": jaxv},
+           "rounds_per_s": per_s, "uplink_bytes": bytes_,
+           "gates": {"pass_latency": ok}, "note": "synthetic"}
+    with open(path, "w") as f:
+        json.dump(rep, f)
+    return str(path)
+
+
+def test_bench_identical_pass(tmp_path):
+    a = _bench_report(tmp_path / "a.json")
+    b = _bench_report(tmp_path / "b.json")
+    code, deltas = compare_bench_files(a, b)
+    assert code == 0
+    assert not [d for d in deltas if d.status in ("BREACH", "REFUSE")]
+
+
+def test_bench_name_mismatch_refuses(tmp_path):
+    a = _bench_report(tmp_path / "a.json", bench="round_latency")
+    b = _bench_report(tmp_path / "b.json", bench="cohort_scaling")
+    code, deltas = compare_bench_files(a, b)
+    assert code == 2 and deltas[0].name == "meta.bench"
+
+
+def test_bench_config_mismatch_refuses_unless_ignored(tmp_path):
+    a = _bench_report(tmp_path / "a.json", cohort=8)
+    b = _bench_report(tmp_path / "b.json", cohort=16)
+    code, deltas = compare_bench_files(a, b)
+    assert code == 2
+    refusal = [d for d in deltas if d.status == "REFUSE"][0]
+    assert refusal.name == "meta.config.cohort"
+    assert "--ignore-config" in refusal.note
+    code, _ = compare_bench_files(a, b, ignore_config=("cohort",))
+    assert code == 0
+
+
+def test_bench_host_drift_warns_not_refuses(tmp_path):
+    a = _bench_report(tmp_path / "a.json", host="ci-1")
+    b = _bench_report(tmp_path / "b.json", host="laptop")
+    code, deltas = compare_bench_files(a, b)
+    assert code == 0
+    assert any(d.name == "meta.host" and d.status == "warn"
+               for d in deltas)
+
+
+def test_bench_gate_flip_breaches(tmp_path):
+    a = _bench_report(tmp_path / "a.json", ok=True)
+    b = _bench_report(tmp_path / "b.json", ok=False)
+    code, deltas = compare_bench_files(a, b)
+    assert code == 1
+    assert any(d.name == "gates.pass_latency" and d.status == "BREACH"
+               for d in deltas)
+    # the reverse direction (newly passing) is informational
+    code, _ = compare_bench_files(b, a)
+    assert code == 0
+
+
+def test_bench_perf_drop_breaches_and_tolerance_loosens(tmp_path):
+    a = _bench_report(tmp_path / "a.json", per_s=50.0)
+    b = _bench_report(tmp_path / "b.json", per_s=30.0)   # -40% > 25%
+    code, deltas = compare_bench_files(a, b)
+    assert code == 1
+    assert any(d.name == "rounds_per_s" for d in deltas)
+    code, _ = compare_bench_files(a, b, Tolerances(perf_rel=0.5))
+    assert code == 0
+    # faster is never a breach
+    code, _ = compare_bench_files(b, a)
+    assert code == 0
+
+
+def test_bench_bytes_drift_breaches(tmp_path):
+    a = _bench_report(tmp_path / "a.json", bytes_=4096)
+    b = _bench_report(tmp_path / "b.json", bytes_=4000)
+    code, deltas = compare_bench_files(a, b)
+    assert code == 1
+    assert any(d.name == "uplink_bytes" for d in deltas)
+
+
+def test_bench_missing_meta_warns(tmp_path):
+    a = tmp_path / "a.json"
+    a.write_text(json.dumps({"rounds_per_s": 50.0}))     # pre-PR10 file
+    b = _bench_report(tmp_path / "b.json", per_s=50.0)
+    code, deltas = compare_bench_files(str(a), str(b))
+    assert deltas[0].status == "warn" and "meta" in deltas[0].name
+    assert code == 2   # body keys then differ -> schema-drift refusal
+
+
+def test_write_bench_report_stamps_meta(tmp_path):
+    import jax
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "benchmarks"))
+    try:
+        from common import write_bench_report
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_x.json"
+    stamped = write_bench_report(str(out), {"ok": True,
+                                            "config": {"cohort": 4}},
+                                 bench="x")
+    on_disk = json.loads(out.read_text())
+    assert on_disk == stamped
+    assert stamped["meta"]["bench"] == "x"
+    assert stamped["meta"]["config"] == {"cohort": 4}
+    assert stamped["meta"]["jax_version"] == jax.__version__
+    assert stamped["ok"] is True
+    # two identically-configured stamped reports compare clean
+    out2 = tmp_path / "BENCH_y.json"
+    write_bench_report(str(out2), {"ok": True, "config": {"cohort": 4}},
+                       bench="x")
+    code, _ = compare_bench_files(str(out), str(out2))
+    assert code == 0
+
+
+# ---------------------------------------------------------------------------
+# the CLIs
+# ---------------------------------------------------------------------------
+def test_compare_cli_run_dirs(tmp_path, capsys):
+    a = _write_run(str(tmp_path / "a"))
+    b = _write_run(str(tmp_path / "b"), dispatch_s=0.30)
+    assert compare_main([a, a]) == 0
+    assert compare_main([a, b]) == 1
+    assert compare_main([a, b, "--perf-rel-tol", "0.95",
+                         "--phase-rel-tol", "3.0"]) == 0
+    out = capsys.readouterr().out
+    assert "PASS" in out and "BREACH" in out
+
+
+def test_compare_cli_mixed_modes_refuse(tmp_path):
+    run = _write_run(str(tmp_path / "a"))
+    bench = _bench_report(tmp_path / "b.json")
+    assert compare_main([run, bench]) == 2
+    assert compare_main([str(tmp_path / "nope"), run]) == 2
+
+
+def test_compare_cli_bench_files(tmp_path):
+    a = _bench_report(tmp_path / "a.json", cohort=8)
+    b = _bench_report(tmp_path / "b.json", cohort=16)
+    assert compare_main([a, b]) == 2
+    assert compare_main([a, b, "--ignore-config", "cohort"]) == 0
+
+
+def test_report_cli(tmp_path, capsys):
+    run = _write_run(str(tmp_path / "a"))
+    assert report_main([run]) == 0
+    out = capsys.readouterr().out
+    assert "rounds" in out and "dispatch" in out
+    assert report_main([run, "--json"]) == 0
+    parsed = json.loads(capsys.readouterr().out)
+    assert parsed["rounds"] == 4
+    assert report_main([str(tmp_path / "missing")]) == 2

@@ -1,0 +1,243 @@
+"""Trace analytics (PR 10): the Chrome-trace parser's math pinned on a
+hand-computed miniature fixture, plus the live wiring — a profiled
+trainer run lands ``profile_summary`` and ``roofline`` events in
+``metrics.jsonl`` with exactly the schema-pinned keys.
+
+Fixture geometry (``tests/fixtures/mini_trace.json.gz``, all times us):
+
+  python lane (pid 1 / tid 10):
+    repro.phase.dispatch     [100, 300)
+    repro.phase.device_sync  [300, 400)
+  device lane (pid 2 / tid 20, args.hlo_op set):
+    big_op    [120, 220)   contains small_op [140, 170)
+    dot.1     [310, 360)
+    orphan_op [500, 540)   outside every phase window
+
+Hand math: selfs big=70 small=30 dot=50 orphan=40 (total 190);
+busy = union = 100+50+40 = 190; wall = 540-120 = 420; gap = 230;
+phase attribution {dispatch: 100, device_sync: 50, _unattributed: 40}.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import FederatedTrainer
+from repro.data.pipeline import FederatedData
+from repro.models.model import Model
+from repro.obs import (PROFILE_SUMMARY_EVENT_KEYS, ROOFLINE_EVENT_KEYS,
+                       emit_profile_summary, find_trace_file)
+from repro.obs.trace_analysis import (interval_union_us, load_trace,
+                                      op_events, phase_windows, self_times,
+                                      summarize, summarize_trace)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "mini_trace.json.gz")
+
+
+# ---------------------------------------------------------------------------
+# fixture math
+# ---------------------------------------------------------------------------
+def test_fixture_op_events_and_phase_windows():
+    trace = load_trace(FIXTURE)
+    ops = op_events(trace)
+    assert sorted(e["name"] for e in ops) == \
+        ["big_op", "dot.1", "orphan_op", "small_op"]
+    windows = phase_windows(trace)
+    assert windows == [("dispatch", 100.0, 300.0),
+                       ("device_sync", 300.0, 400.0)]
+
+
+def test_fixture_self_times_subtract_nested_children():
+    trace = load_trace(FIXTURE)
+    ops = op_events(trace)
+    by_name = dict(zip((e["name"] for e in ops), self_times(ops)))
+    assert by_name == {"big_op": 70.0, "small_op": 30.0,
+                       "dot.1": 50.0, "orphan_op": 40.0}
+
+
+def test_fixture_interval_union_merges_overlaps():
+    trace = load_trace(FIXTURE)
+    assert interval_union_us(op_events(trace)) == 190.0
+    # the nested child adds no new covered time
+    assert interval_union_us([{"ts": 0, "dur": 10},
+                              {"ts": 5, "dur": 10},
+                              {"ts": 100, "dur": 1}]) == 16.0
+
+
+def test_fixture_summary_numbers():
+    s = summarize(load_trace(FIXTURE))
+    assert s["n_events"] == 6          # 2 phase annotations + 4 ops
+    assert s["n_op_events"] == 4
+    assert s["n_ops"] == 4
+    assert s["wall_us"] == 420.0
+    assert s["busy_us"] == 190.0
+    assert s["gap_us"] == 230.0
+    assert s["busy_frac"] == pytest.approx(190.0 / 420.0, abs=1e-6)
+    assert s["total_self_us"] == 190.0
+
+
+def test_fixture_phase_attribution():
+    s = summarize(load_trace(FIXTURE))
+    # big_op+small_op inside dispatch, dot.1 inside device_sync,
+    # orphan_op outside every window -> _unattributed (not dropped)
+    assert s["phase_self_us"] == {"_unattributed": 40.0,
+                                  "device_sync": 50.0,
+                                  "dispatch": 100.0}
+
+
+def test_fixture_top_ops_ordering_and_truncation():
+    s = summarize(load_trace(FIXTURE), top_k=2)
+    assert s["top_k"] == 2
+    assert [o["op"] for o in s["top_ops"]] == ["big_op", "dot.1"]
+    top = summarize(load_trace(FIXTURE))["top_ops"]
+    assert [o["op"] for o in top] == \
+        ["big_op", "dot.1", "orphan_op", "small_op"]
+    assert top[0] == {"op": "big_op", "self_us": 70.0, "total_us": 100.0,
+                      "count": 1}
+
+
+def test_summarize_trace_adds_path_and_schema_matches():
+    s = summarize_trace(FIXTURE)
+    assert s["trace"] == FIXTURE
+    assert set(s) == set(PROFILE_SUMMARY_EVENT_KEYS)
+
+
+def test_find_trace_file(tmp_path):
+    # direct file passthrough
+    assert find_trace_file(FIXTURE) == FIXTURE
+    # newest-by-mtime under a nested dir, .gz and plain both found
+    d = tmp_path / "profile" / "plugins" / "profile" / "2026_08_08"
+    d.mkdir(parents=True)
+    old = d / "a.trace.json"
+    new = d / "b.trace.json.gz"
+    old.write_text(json.dumps({"traceEvents": []}))
+    import gzip
+    with gzip.open(new, "wt") as f:
+        f.write(json.dumps({"traceEvents": []}))
+    os.utime(old, (1, 1))
+    assert find_trace_file(str(tmp_path)) == str(new)
+    assert find_trace_file(str(tmp_path / "empty")) is None
+
+
+class _Recorder:
+    def __init__(self):
+        self.events = []
+
+    def log_event(self, name, data):
+        self.events.append((name, dict(data)))
+
+
+def test_emit_profile_summary_streams_event(tmp_path):
+    trk = _Recorder()
+    assert emit_profile_summary(trk, str(tmp_path)) is None  # no trace
+    assert emit_profile_summary(trk, FIXTURE)["busy_us"] == 190.0
+    assert len(trk.events) == 1
+    name, payload = trk.events[0]
+    assert name == "profile_summary"
+    assert set(payload) == set(PROFILE_SUMMARY_EVENT_KEYS)
+    # payload is JSON-serializable as emitted (jsonl tracker contract)
+    json.dumps(payload)
+
+
+def test_self_times_interleaved_lanes_do_not_nest():
+    # same window on DIFFERENT lanes: no parent/child relation
+    evs = [{"pid": 1, "tid": 1, "ts": 0, "dur": 100, "name": "a"},
+           {"pid": 1, "tid": 2, "ts": 10, "dur": 50, "name": "b"}]
+    assert self_times(evs) == [100.0, 50.0]
+
+
+def test_summarize_empty_trace():
+    s = summarize({"traceEvents": []})
+    assert s["n_op_events"] == 0 and s["wall_us"] == 0.0
+    assert s["busy_frac"] == 0.0 and s["top_ops"] == []
+
+
+# ---------------------------------------------------------------------------
+# live wiring: profiled trainer run -> profile_summary + roofline events
+# ---------------------------------------------------------------------------
+def _mlp_model(d=10, h=16, classes=4):
+    def init(k):
+        k1, k2 = jax.random.split(k)
+        return {"w1": jax.random.normal(k1, (d, h)) * 0.3,
+                "w2": jax.random.normal(k2, (h, classes)) * 0.3}
+
+    def loss(w, batch, rng=None):
+        logits = jnp.tanh(batch["x"] @ w["w1"]) @ w["w2"]
+        l = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), batch["y"][:, None], 1))
+        return l, {}
+
+    return Model(name="mlp", init=init, loss=loss)
+
+
+def _fed_data(n=256, clients=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 10)).astype(np.float32)
+    y = rng.integers(0, 4, n).astype(np.int32)
+    parts = np.array_split(rng.permutation(n), clients)
+    meta = rng.choice(n, 32, replace=False)
+    return FederatedData(arrays={"x": x, "y": y}, client_indices=parts,
+                         meta_indices=meta, seed=seed)
+
+
+_FED = FedConfig(algorithm="uga", meta=False, cohort=4, local_steps=2,
+                 client_lr=0.05, server_lr=0.1, clip_norm=1.0,
+                 fused_update=True)
+
+
+def _events(run_dir, name):
+    out = []
+    with open(os.path.join(run_dir, "metrics.jsonl")) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("kind") == "event" and rec.get("event") == name:
+                out.append(rec)
+    return out
+
+
+def test_trainer_trace_summary_and_roofline_events(tmp_path):
+    model, data = _mlp_model(), _fed_data()
+    tr = FederatedTrainer(model, _FED, seed=0, tracker="jsonl",
+                          run_dir=str(tmp_path), profile=1, profile_start=1,
+                          trace_summary=True, roofline=True)
+    tr.run(data, rounds=3, cohort=4, batch=16, meta_batch=8)
+    tr.finish()
+
+    summaries = _events(tmp_path, "profile_summary")
+    assert len(summaries) == 1
+    payload = {k: v for k, v in summaries[0].items()
+               if k not in ("kind", "event", "t")}
+    assert set(payload) == set(PROFILE_SUMMARY_EVENT_KEYS)
+    assert payload["n_events"] > 0
+
+    rooflines = _events(tmp_path, "roofline")
+    assert len(rooflines) == 1
+    payload = {k: v for k, v in rooflines[0].items()
+               if k not in ("kind", "event", "t")}
+    assert set(payload) == set(ROOFLINE_EVENT_KEYS)
+    assert payload["rounds_per_call"] == 1
+    assert payload["flops_per_round"] > 0
+    assert payload["measured_rounds_per_s"] > 0
+    assert payload["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_trace_summary_without_profile_is_an_error():
+    with pytest.raises(ValueError, match="profile"):
+        FederatedTrainer(_mlp_model(), _FED, seed=0, trace_summary=True)
+
+
+def test_roofline_skipped_under_sanitize(tmp_path):
+    """Sanitize mode wraps the round fn in a checkify closure with no
+    .lower — roofline must skip quietly, not crash the run."""
+    model, data = _mlp_model(), _fed_data()
+    tr = FederatedTrainer(model, _FED, seed=0, sanitize=True,
+                          tracker="jsonl", run_dir=str(tmp_path),
+                          roofline=True)
+    tr.run(data, rounds=2, cohort=4, batch=16, meta_batch=8)
+    tr.finish()
+    assert _events(tmp_path, "roofline") == []
